@@ -1,0 +1,51 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (block_until_ready-aware)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Table:
+    """Collects rows; prints aligned text + the harness CSV contract."""
+
+    def __init__(self, name: str, columns: List[str]):
+        self.name = name
+        self.columns = columns
+        self.rows: List[List] = []
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def show(self):
+        print(f"\n== {self.name} ==")
+        widths = [max(len(str(c)), *(len(str(r[i])) for r in self.rows))
+                  if self.rows else len(str(c))
+                  for i, c in enumerate(self.columns)]
+        print("  ".join(str(c).ljust(w) for c, w in zip(self.columns, widths)))
+        for r in self.rows:
+            print("  ".join(str(x).ljust(w) for x, w in zip(r, widths)))
+
+    def csv_lines(self) -> List[str]:
+        """name,us_per_call,derived rows for benchmarks.run's contract."""
+        out = []
+        for r in self.rows:
+            out.append(f"{self.name}/{r[0]}," + ",".join(str(x) for x in r[1:]))
+        return out

@@ -1,0 +1,65 @@
+"""Paper Fig. 3: inference latency vs sequence length, with/without the
+global KV cache.
+
+The paper's claim (C2): with the paged KV cache, per-token latency grows
+~linearly as context grows 128→2048; without caching (re-running the full
+prefix every token) it grows ~like the square (reported "exponential" —
+~10× per doubling on their stack).  We reproduce the *scaling shapes* on
+CPU with the reduced model; absolute numbers are CPU-scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, timeit
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig
+from repro.models.api import build_model
+
+SEQ_LENS = [128, 256, 512, 1024, 2048]
+
+
+def run(fast: bool = False):
+    cfg = get_smoke("llama2-7b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    seq_lens = SEQ_LENS[:3] if fast else SEQ_LENS
+    t = Table("fig3_latency",
+              ["seq_len", "cached_us_tok", "uncached_us_tok", "ratio"])
+
+    decode = jax.jit(lambda p, tok, st: model.decode_step(p, tok, st))
+    forward = jax.jit(lambda p, toks: model.forward(p, toks))
+
+    rows = []
+    for S in seq_lens:
+        B = 1
+        run_cfg = RunConfig(model=cfg, seq_len=S + 8, global_batch=B,
+                            kind="decode")
+        st = model.init_decode_state(run_cfg)
+        b, n_sh, pps = st["tables"].shape
+        st["tables"] = jnp.arange(b * n_sh * pps,
+                                  dtype=jnp.int32).reshape(b, n_sh, pps)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                  cfg.vocab_size)
+        _, st = model.prefill(params, toks, st)
+        tok = jnp.ones((B,), jnp.int32)
+
+        # cached: one decode step against an S-token cache
+        t_cached = timeit(decode, params, tok, st)
+        # uncached: regenerate the whole prefix every new token
+        t_uncached = timeit(forward, params, toks)
+        rows.append((S, t_cached, t_uncached))
+        t.add(S, round(t_cached * 1e6, 1), round(t_uncached * 1e6, 1),
+              round(t_uncached / t_cached, 1))
+
+    # C2 scaling check: cached grows sub-linearly vs uncached growth
+    c0, cN = rows[0][1], rows[-1][1]
+    u0, uN = rows[0][2], rows[-1][2]
+    span = rows[-1][0] / rows[0][0]
+    t.add("growth_x", round(cN / c0, 2), round(uN / u0, 2),
+          f"context x{span:.0f}")
+    t.show()
+    return t

@@ -1,0 +1,51 @@
+"""Paper Fig. 4: steady-state decode latency (per token) across sequence
+lengths — PagedAttention vs the default (contiguous max-length) kernel.
+
+Both paths run the identical model; only the KV layout + attention op
+differ.  The paper reports paged consistently at-or-below the default with
+near-linear scaling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Table, timeit
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig
+from repro.core.attention import (decode_attention,
+                                  decode_attention_contiguous)
+
+SEQ_LENS = [128, 256, 512, 1024, 2048]
+
+
+def run(fast: bool = False):
+    cfg = get_smoke("llama2-7b")
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ps = cfg.page_size
+    B = 4
+    seq_lens = SEQ_LENS[:3] if fast else SEQ_LENS
+    t = Table("fig4_decode",
+              ["seq_len", "paged_us", "contiguous_us", "paged/contig"])
+
+    paged = jax.jit(lambda q, kp, vp, bt, l: decode_attention(
+        q, kp, vp, bt, l, impl="ref"))
+    contig = jax.jit(decode_attention_contiguous)
+
+    for S in seq_lens:
+        mp = -(-S // ps)
+        ks = jax.random.split(jax.random.PRNGKey(S), 5)
+        q = jax.random.normal(ks[0], (B, H, D))
+        kp = jax.random.normal(ks[1], (B * mp, ps, Hkv, D))
+        vp = jax.random.normal(ks[2], (B * mp, ps, Hkv, D))
+        bt = jnp.arange(B * mp, dtype=jnp.int32).reshape(B, mp)
+        lens = jnp.full((B,), S, jnp.int32)
+        kc = jax.random.normal(ks[3], (B, S, Hkv, D))
+        vc = jax.random.normal(ks[4], (B, S, Hkv, D))
+
+        tp = timeit(paged, q, kp, vp, bt, lens)
+        tc = timeit(contig, q, kc, vc, lens)
+        t.add(S, round(tp * 1e6, 1), round(tc * 1e6, 1), round(tp / tc, 2))
+    t.show()
+    return t

@@ -1,0 +1,109 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json (run after repro.launch.dryrun sweeps).
+
+Usage: PYTHONPATH=src python -m benchmarks.make_experiments_tables
+Prints markdown to stdout.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["nemotron-4-340b", "granite-moe-1b-a400m", "olmoe-1b-7b",
+              "xlstm-350m", "llama3-405b", "nemotron-4-15b",
+              "llama-3.2-vision-11b", "whisper-medium", "granite-8b",
+              "recurrentgemma-9b"]
+
+
+def load(outdir="experiments/dryrun"):
+    data = {}
+    for p in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("tag"):
+            continue  # perf-iteration runs handled separately
+        data[(r["arch"], r["shape"], r["mesh"])] = r
+    return data
+
+
+def gib(x):
+    return f"{x/2**30:.2f}"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f} s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f} ms"
+    return f"{x*1e6:.0f} µs"
+
+
+def dryrun_table(data):
+    print("| arch | shape | pod: peak GiB/dev (TPU-est) | compile s | "
+          "scheme | mb | multipod: peak GiB/dev | status |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            pod = data.get((arch, shape, "pod"))
+            mp = data.get((arch, shape, "multipod"))
+            if pod is None:
+                continue
+            if pod["status"] == "skipped":
+                print(f"| {arch} | {shape} | — | — | — | — | — | "
+                      f"skipped: {pod['reason'][:60]}… |")
+                continue
+            if pod["status"] != "ok":
+                print(f"| {arch} | {shape} | — | — | — | — | — | ERROR |")
+                continue
+            m = pod["memory"]
+            pk = f"{gib(m['peak_bytes'])} ({gib(m.get('peak_bytes_tpu_est', m['peak_bytes']))})"
+            plan = pod["plan"]
+            mpk = "—"
+            status = "ok (pod)"
+            if mp and mp["status"] == "ok":
+                mm = mp["memory"]
+                mpk = f"{gib(mm['peak_bytes'])} ({gib(mm.get('peak_bytes_tpu_est', mm['peak_bytes']))})"
+                status = "ok (pod+multipod)"
+            print(f"| {arch} | {shape} | {pk} | {pod['compile_s']} | "
+                  f"{plan['scheme']} | {plan['microbatches']} | {mpk} | "
+                  f"{status} |")
+
+
+def roofline_table(data):
+    print("| arch | shape | compute | memory | collective | bottleneck | "
+          "useful frac | coll. mix (top) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            pod = data.get((arch, shape, "pod"))
+            if pod is None or pod.get("status") != "ok" or "roofline" not in pod:
+                continue
+            r = pod["roofline"]
+            coll = pod["collectives_full"]
+            top = max((k for k in coll if k != "total"),
+                      key=lambda k: coll[k], default="-")
+            uf = r["useful_frac"]
+            uf_s = ("n/a (time-scan)" if arch == "xlstm-350m"
+                    and shape in ("train_4k", "prefill_32k")
+                    else f"{uf:.2f}")
+            print(f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+                  f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                  f"{r['bottleneck'].replace('_s','')} | {uf_s} | {top} |")
+
+
+def main():
+    data = load()
+    print("### §Dry-run — 40-pair baseline (single-pod 16×16 + multi-pod "
+          "2×16×16)\n")
+    dryrun_table(data)
+    print("\n### §Roofline — three-term analysis (single-pod, v5e "
+          "constants)\n")
+    roofline_table(data)
+
+
+if __name__ == "__main__":
+    main()

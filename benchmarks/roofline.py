@@ -1,0 +1,47 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-(arch × shape)
+three-term roofline table (EXPERIMENTS.md source of truth).
+
+Reads experiments/dryrun/*.json produced by repro.launch.dryrun.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Table
+
+
+def load(outdir="experiments/dryrun"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def run(fast: bool = False):
+    t = Table("roofline",
+              ["arch", "shape", "mesh", "tag", "compute", "memory",
+               "collective", "bottleneck", "useful_frac", "peak_GiB"])
+    for r in load():
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        t.add(r["arch"], r["shape"], r["mesh"], r.get("tag", ""),
+              fmt_s(rf["compute_s"]), fmt_s(rf["memory_s"]),
+              fmt_s(rf["collective_s"]),
+              rf["bottleneck"].replace("_s", ""),
+              round(rf["useful_frac"], 3),
+              round(r["memory"]["peak_bytes"] / 2**30, 2))
+    t.show()
+    return t

@@ -1,0 +1,60 @@
+"""Benchmark runner — one module per paper table/figure.
+
+  fig3_latency    latency vs context, cached vs uncached        (Fig. 3)
+  fig4_decode     decode ms/token, paged vs contiguous kernel   (Fig. 4)
+  fig12_memory    KV memory accounting, paged vs baseline       (Figs. 1-2)
+  tbl_allocator   O(1) RESERVE/FREE microbenchmark              (contrib. 1)
+  tbl_perplexity  numerical equivalence of eval loss            (§IV-B3)
+  mixed_batch     throughput under a fixed memory budget        (§IV b)
+  roofline        dry-run roofline aggregation                  (§Roofline)
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list of bench names")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_latency, fig4_decode, fig12_memory,
+                            mixed_batch, roofline, tbl_allocator,
+                            tbl_pagesize, tbl_perplexity)
+    benches = {
+        "fig3_latency": fig3_latency.run,
+        "fig4_decode": fig4_decode.run,
+        "fig12_memory": fig12_memory.run,
+        "tbl_allocator": tbl_allocator.run,
+        "tbl_pagesize": tbl_pagesize.run,
+        "tbl_perplexity": tbl_perplexity.run,
+        "mixed_batch": mixed_batch.run,
+        "roofline": roofline.run,
+    }
+    only = [s for s in args.only.split(",") if s]
+    csv = ["name,us_per_call,derived"]
+    failed = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            table = fn(fast=args.fast)
+            csv.extend(table.csv_lines())
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    print("\n--- CSV ---")
+    print("\n".join(csv))
+    if failed:
+        print(f"\nFAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Paper contribution 1: O(1) lock-free allocator — latency microbench.
+
+RESERVE/FREE wall time must be independent of pool occupancy and pool
+size (the paper's "constant-time allocation off the critical path").
+Measured for the host mirror (scheduler path) and the jitted device state
+machine (decode path).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table
+from repro.core import paging
+from repro.core.paging import HostPageManager
+
+
+def host_alloc_us(num_pages: int, occupancy: float) -> float:
+    mgr = HostPageManager(num_pages=num_pages, page_size=64)
+    n_busy = int(num_pages * occupancy)
+    seq = 0
+    while mgr.used_pages < n_busy:
+        mgr.reserve(seq, 64 * min(16, n_busy - mgr.used_pages))
+        seq += 1
+    # measure single-page extend + free cycles at this occupancy
+    t0 = time.perf_counter()
+    iters = 2000
+    for i in range(iters):
+        mgr.reserve(10_000, 64)
+        mgr.free(10_000)
+    return (time.perf_counter() - t0) / iters / 2 * 1e6
+
+
+def run(fast: bool = False):
+    t = Table("tbl_allocator",
+              ["pool_pages", "occupancy", "host_us_per_op",
+               "device_us_per_op"])
+    sizes = [1024, 16384] if fast else [1024, 16384, 131072]
+    for num_pages in sizes:
+        for occ in (0.0, 0.5, 0.9):
+            dev = device_alloc_us(num_pages)
+            t.add(num_pages, occ, round(host_alloc_us(num_pages, occ), 3),
+                  round(dev, 1))
+    t.show()
+    # O(1) check: latency at 128k pages within 3x of 1k pages
+    host = {(r[0], r[1]): r[2] for r in t.rows}
+    big = host[(sizes[-1], 0.9)]
+    small = host[(sizes[0], 0.0)]
+    t.add("o1_ratio", round(big / max(small, 1e-9), 2), "", "")
+    t.show()
+    return t
+
+
+_dev_cache = {}
+
+
+def device_alloc_us(num_pages: int) -> float:
+    """Jitted reserve+free cycle on the functional device state."""
+    if num_pages not in _dev_cache:
+        state = paging.init_state(num_pages, max_seqs=8, max_pages_per_seq=8)
+
+        @jax.jit
+        def cycle(st):
+            st = paging.reserve(st, jnp.int32(0), jnp.int32(64), 64)
+            return paging.free(st, jnp.int32(0), 64)
+
+        cycle(state)  # compile
+        _dev_cache[num_pages] = (cycle, state)
+    cycle, state = _dev_cache[num_pages]
+    t0 = time.perf_counter()
+    iters = 200
+    for _ in range(iters):
+        state = cycle(state)
+    jax.block_until_ready(state.free_top)
+    return (time.perf_counter() - t0) / iters / 2 * 1e6

@@ -1,0 +1,60 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+Builds a small LLaMA-style model, turns on PagedAttention with one config
+flag (the paper's "drop-in deployability"), serves a few requests through
+the continuous-batching engine, and prints the memory accounting that
+motivates the whole paper.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import ByteTokenizer
+from repro.serving import Engine, Request
+
+
+def main():
+    # 1. pick a model config; .smoke() gives the CPU-runnable reduction
+    cfg = get_config("llama2-7b").smoke()
+    print(f"model: {cfg.name} ({cfg.n_layers}L d={cfg.d_model}, "
+          f"page_size={cfg.page_size}, paged={cfg.paged_attention})")
+
+    # 2. an engine with an intentionally small page pool: 4 slots x 256
+    #    max tokens would need 1024 tokens of KV; we give it 512 and let
+    #    the scheduler admit/preempt (the paper's memory win)
+    eng = Engine(cfg, max_slots=4, max_seq_len=256, pool_tokens=512)
+
+    # 3. requests (byte-tokenized text prompts of mixed length)
+    tok = ByteTokenizer()
+    prompts = [
+        "Paged attention partitions the KV cache into fixed-size pages.",
+        "A block table maps logical positions to physical pages.",
+        "Short prompt.",
+        "Fragmentation wastes 60-80% of KV memory in mixed batches, " * 3,
+    ]
+    reqs = [Request(prompt=tok.encode(p)[:200], max_new_tokens=16,
+                    temperature=0.8, top_k=40) for p in prompts]
+
+    # 4. run the continuous-batching loop to completion
+    eng.generate(reqs)
+
+    for r in reqs:
+        print(f"req {r.rid}: {r.prompt_len:3d} prompt tokens -> "
+              f"{len(r.output)} new, ttft {r.metrics['ttft_s']*1e3:.0f} ms, "
+              f"{r.metrics['tok_s']:.1f} tok/s")
+    print(f"engine steps: {eng.steps}, preemptions: {eng.scheduler.preempted}")
+
+    # 5. the paper's point: near-zero waste vs max-length preallocation
+    rep = eng.memory_report()
+    contiguous = 4 * 256  # slots x max_seq_len tokens
+    print(f"paged pool: {eng.num_pages} pages "
+          f"({eng.num_pages * cfg.page_size} tokens) vs contiguous "
+          f"reservation {contiguous} tokens")
+    print(f"post-run overhead vs theoretical minimum: "
+          f"{rep['overhead_frac']*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

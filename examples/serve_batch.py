@@ -1,0 +1,69 @@
+"""End-to-end serving driver: batched requests through the paged engine.
+
+The paper's §IV scenario (b): a mixed-length wave of requests served by
+continuous batching on an oversubscribed page pool, compared against the
+contiguous-baseline engine under the SAME byte budget. Prints throughput,
+TTFT percentiles, preemption counts, and the memory ledger.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch granite-8b]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving import Engine, Request
+
+
+def wave(rng, n, max_prompt, max_new):
+    return [Request(prompt=rng.integers(0, 256,
+                                        size=int(rng.integers(8, max_prompt))
+                                        ).tolist(),
+                    max_new_tokens=max_new) for _ in range(n)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    slots, max_seq, pool = 8, 128, 640
+    rng = np.random.default_rng(0)
+
+    print(f"== paged engine: {slots} slots, pool {pool} tokens ==")
+    eng = Engine(cfg, max_slots=slots, max_seq_len=max_seq,
+                 pool_tokens=pool)
+    reqs = wave(rng, args.requests, max_seq - args.max_new, args.max_new)
+    t0 = time.perf_counter()
+    eng.generate(reqs, max_steps=3000)
+    wall = time.perf_counter() - t0
+    new_toks = sum(len(r.output) for r in reqs)
+    ttfts = sorted(r.metrics["ttft_s"] for r in reqs)
+    print(f"{new_toks} tokens in {wall:.1f}s = {new_toks/wall:.2f} tok/s; "
+          f"ttft p50 {ttfts[len(ttfts)//2]:.2f}s "
+          f"p95 {ttfts[int(len(ttfts)*0.95)]:.2f}s; "
+          f"preemptions {eng.scheduler.preempted}")
+    print(eng.memory_report())
+
+    # contiguous baseline under the same KV byte budget -> fewer slots
+    slots_c = max(1, pool // max_seq)
+    print(f"\n== contiguous baseline: {slots_c} slots (same bytes) ==")
+    eng2 = Engine(cfg, params=eng.params, paged=False, max_slots=slots_c,
+                  max_seq_len=max_seq)
+    reqs2 = wave(np.random.default_rng(0), args.requests,
+                 max_seq - args.max_new, args.max_new)
+    t0 = time.perf_counter()
+    eng2.generate(reqs2, max_steps=3000)
+    wall2 = time.perf_counter() - t0
+    new2 = sum(len(r.output) for r in reqs2)
+    print(f"{new2} tokens in {wall2:.1f}s = {new2/wall2:.2f} tok/s")
+    print(f"\npaged speedup at equal memory: {new_toks/wall/(new2/wall2):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end training driver: train a ~small model for a few hundred
+steps on the synthetic LM stream, checkpoint, and evaluate with the paged
+decode path (proving train → serve round-trip through one nn-module, the
+paper's "training, fine-tuning, and inference share the same module"
+portability argument).
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.data import synthetic_batches
+from repro.models.api import build_model
+from repro.serving import Engine, Request
+from repro.training import train_loop
+from repro.training.checkpoint import restore, save
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="granite-8b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    model = build_model(cfg)
+    data = synthetic_batches(8, 64, cfg.vocab_size, seed=0, cfg=cfg)
+
+    print(f"training {cfg.name}: {args.steps} steps, batch 8 x 64")
+    state, hist = train_loop(model, data, steps=args.steps, lr=1e-3,
+                             log_every=max(args.steps // 10, 1))
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    save("/tmp/train_small.npz", state.params)
+    params = restore("/tmp/train_small.npz",
+                     jax.eval_shape(lambda: state.params))
+    print("checkpoint saved + restored")
+
+    # serve the trained weights through the paged engine
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=128)
+    reqs = [Request(prompt=[1, 2, 3, 4], max_new_tokens=12)]
+    eng.generate(reqs)
+    print(f"greedy continuation from trained model: {reqs[0].output}")
+
+    # eval perplexity with the paged cache vs teacher-forced (C1)
+    toks = jnp.asarray(next(synthetic_batches(2, 32, cfg.vocab_size,
+                                              seed=7))["inputs"])
+    logits = model.forward(params, toks)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    gold = jnp.take_along_axis(lp[:, :-1], toks[:, 1:, None], 2)[..., 0]
+    print(f"teacher-forced eval loss: {float(-gold.mean()):.4f} "
+          f"(ppl {float(jnp.exp(-gold.mean())):.2f})")
+
+
+if __name__ == "__main__":
+    main()

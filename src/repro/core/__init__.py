@@ -1,0 +1,14 @@
+from repro.core import attention, cache, flex, paging
+from repro.core.cache import ContiguousKVCache, PagedKVCache
+from repro.core.paging import HostPageManager, PageState
+
+__all__ = [
+    "attention",
+    "cache",
+    "flex",
+    "paging",
+    "ContiguousKVCache",
+    "PagedKVCache",
+    "HostPageManager",
+    "PageState",
+]

@@ -1,0 +1,305 @@
+"""FlexAttention-style composable masking — the paper's §III-B kernel API.
+
+PyTorch FlexAttention lets users supply ``mask_mod(b, h, q_idx, kv_idx)`` and
+``score_mod(score, b, h, q_idx, kv_idx)`` hooks which the compiler fuses into
+one attention kernel.  We reproduce the same API in JAX:
+
+  * mask mods are vectorisable predicates over (b, h, q, k) index arrays;
+  * combinators ``and_masks`` / ``or_masks`` compose them;
+  * ``build_block_mask`` compiles a mod into a FlexAttention-style
+    ``BlockMask`` — per (q-block) lists of live kv-blocks plus a
+    full/partial flag — which the Pallas prefill kernel uses to *skip*
+    fully-masked tiles and to elide the element-wise mask on full tiles;
+  * the paper's paged mask  «allow ⟺ (id_q = id_k) ∧ (k ≤ len(id_q))»
+    is ``paged_mask(seq_ids, lens)`` over the *gathered* layout, and is
+    exactly what the decode kernel enforces via block tables.
+
+All mods broadcast: inputs are integer arrays, output bool array.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MaskMod = Callable[..., jax.Array]  # (b, h, q_idx, kv_idx) -> bool
+ScoreMod = Callable[..., jax.Array]  # (score, b, h, q_idx, kv_idx) -> score
+
+
+class AuxMod:
+    """A mask/score mod that reads auxiliary tensors (FlexAttention's
+    "passed as bias" trick — the paper's §III-B sequence-ID / prefix-sum
+    vectors).  The Pallas kernel receives ``aux`` as scalar-prefetch
+    operands instead of capturing them as constants.
+
+    ``fn(b, h, q, k, *aux)`` (mask) or ``fn(score, b, h, q, k, *aux)``.
+    """
+
+    def __init__(self, fn: Callable, aux: Sequence[jax.Array],
+                 is_score: bool = False):
+        self.fn = fn
+        self.aux = tuple(aux)
+        self.is_score = is_score
+
+    def __call__(self, *args):
+        return self.fn(*args, *self.aux)
+
+
+def _split(mods):
+    """Flatten (fn, n_aux, aux) triples out of a mod list."""
+    fns, counts, aux = [], [], []
+    for m in mods:
+        if isinstance(m, AuxMod):
+            fns.append(m.fn)
+            counts.append(len(m.aux))
+            aux.extend(m.aux)
+        else:
+            fns.append(m)
+            counts.append(0)
+    return fns, counts, tuple(aux)
+
+
+# ---------------------------------------------------------------------------
+# mask mods
+# ---------------------------------------------------------------------------
+def full_mask(b, h, q, k):
+    return jnp.ones(jnp.broadcast_shapes(jnp.shape(q), jnp.shape(k)), bool)
+
+
+def causal_mask(b, h, q, k):
+    return k <= q
+
+
+def sliding_window_mask(window: int) -> MaskMod:
+    def mod(b, h, q, k):
+        return (k <= q) & (q - k < window)
+
+    return mod
+
+
+def padding_mask(lens: jax.Array) -> MaskMod:
+    """lens: (B,) — kv positions past a sequence's length are dead."""
+
+    def mod(b, h, q, k, lens):
+        return k < lens[b]
+
+    return AuxMod(mod, (lens,))
+
+
+def document_mask(doc_ids: jax.Array) -> MaskMod:
+    """Jagged batches packed in one sequence: attend within a document only.
+
+    This is the paper's «id_q = id_k» predicate (§III-B) for packed layouts.
+    """
+
+    def mod(b, h, q, k, docs):
+        return docs[b, q] == docs[b, k]
+
+    return AuxMod(mod, (doc_ids,))
+
+
+def prefix_lm_mask(prefix_len: int) -> MaskMod:
+    def mod(b, h, q, k):
+        return (k <= q) | (k < prefix_len)
+
+    return mod
+
+
+def _combine(op, mods):
+    fns, counts, aux = _split(mods)
+
+    def fn(b, h, q, k, *aux_in):
+        out = None
+        i = 0
+        for f, n in zip(fns, counts):
+            r = f(b, h, q, k, *aux_in[i:i + n])
+            i += n
+            out = r if out is None else op(out, r)
+        return out
+
+    if aux:
+        return AuxMod(fn, aux)
+    return lambda b, h, q, k: fn(b, h, q, k)
+
+
+def and_masks(*mods: MaskMod) -> MaskMod:
+    return _combine(lambda a, b: a & b, mods)
+
+
+def or_masks(*mods: MaskMod) -> MaskMod:
+    return _combine(lambda a, b: a | b, mods)
+
+
+def paged_mask(slot_seq_ids: jax.Array, slot_pos: jax.Array,
+               lens: jax.Array) -> MaskMod:
+    """The paper's fused paged predicate (§III-B) over a packed/paged layout:
+
+        allow ⟺ (id_q == id_k) ∧ (pos_k < len(id_q))
+
+    ``slot_seq_ids[s]``: which sequence owns packed slot s;
+    ``slot_pos[s]``:     that slot's logical position within its sequence;
+    ``lens[i]``:         live length of sequence i.
+    """
+
+    def mod(b, h, q, k, sid, pos, lens):
+        same = sid[q] == sid[k]
+        live = pos[k] < lens[sid[q]]
+        return same & live
+
+    return AuxMod(mod, (slot_seq_ids, slot_pos, lens))
+
+
+# ---------------------------------------------------------------------------
+# score mods
+# ---------------------------------------------------------------------------
+def identity_score(score, b, h, q, k):
+    return score
+
+
+def softcap_score(cap: float) -> ScoreMod:
+    def mod(score, b, h, q, k):
+        return cap * jnp.tanh(score / cap)
+
+    return mod
+
+
+def alibi_score(slopes: jax.Array) -> ScoreMod:
+    def mod(score, b, h, q, k, slopes):
+        return score - slopes[h] * (q - k)
+
+    return AuxMod(mod, (slopes,), is_score=True)
+
+
+def compose_score(*mods: ScoreMod) -> ScoreMod:
+    fns, counts, aux = _split(mods)
+
+    def fn(score, b, h, q, k, *aux_in):
+        i = 0
+        for f, n in zip(fns, counts):
+            score = f(score, b, h, q, k, *aux_in[i:i + n])
+            i += n
+        return score
+
+    if aux:
+        return AuxMod(fn, aux, is_score=True)
+    return lambda s, b, h, q, k: fn(s, b, h, q, k)
+
+
+# ---------------------------------------------------------------------------
+# materialisation (reference path) and BlockMask compilation
+# ---------------------------------------------------------------------------
+def materialize(mod: MaskMod, B: int, H: int, Q: int, K: int) -> jax.Array:
+    b = jnp.arange(B)[:, None, None, None]
+    h = jnp.arange(H)[None, :, None, None]
+    q = jnp.arange(Q)[None, None, :, None]
+    k = jnp.arange(K)[None, None, None, :]
+    return mod(b, h, q, k)
+
+
+class BlockMask(NamedTuple):
+    """FlexAttention-style compiled sparsity.
+
+    kv_num_blocks: ([B,] num_q_blocks,) — live kv blocks per q block
+    kv_indices:    ([B,] num_q_blocks, max_blocks) — their indices (pad = 0)
+    is_full:       ([B,] num_q_blocks, max_blocks) — True ⇒ tile needs no
+                   element-wise mask (interior of the allowed region)
+
+    The optional leading batch dim supports batch-dependent mods (padding,
+    document masks) — mirrors FlexAttention's create_block_mask(B=...).
+    """
+
+    kv_num_blocks: jax.Array
+    kv_indices: jax.Array
+    is_full: jax.Array
+    q_block: int
+    kv_block: int
+
+    @property
+    def batched(self) -> bool:
+        return self.kv_indices.ndim == 3
+
+    @property
+    def sparsity(self) -> float:
+        """Fraction of (q_block, kv_block) tiles skipped entirely."""
+        total = int(np.prod(self.kv_indices.shape))
+        live = int(jnp.sum(self.kv_num_blocks))
+        return 1.0 - live / max(total, 1)
+
+
+def build_block_mask(mod: MaskMod, Q: int, K: int, q_block: int = 128,
+                     kv_block: int = 128, B: Optional[int] = None,
+                     h: int = 0) -> BlockMask:
+    """Compile a mask mod into block sparsity.
+
+    Streams one q-block row at a time (never materialises Q×K) — mirrors
+    FlexAttention's create_block_mask.  Pass ``B`` for batch-dependent mods.
+    """
+    nq = -(-Q // q_block)
+    nk = -(-K // kv_block)
+
+    def row(b, qb):
+        q = qb * q_block + jnp.arange(q_block)[:, None]
+        k = jnp.arange(nk * kv_block)[None, :]
+        valid = (q < Q) & (k < K)
+        m = mod(b, h, q, k) & valid
+        m = m.reshape(q_block, nk, kv_block)
+        any_live = jnp.any(m, axis=(0, 2))
+        # "full" means every in-range element of the tile is allowed
+        in_range = valid.reshape(q_block, nk, kv_block)
+        all_live = jnp.all(m | ~in_range, axis=(0, 2)) & any_live
+        return any_live, all_live
+
+    def per_batch(b):
+        return jax.lax.map(lambda qb: row(b, qb), jnp.arange(nq))
+
+    if B is None:
+        any_live, all_live = per_batch(0)
+    else:
+        any_live, all_live = jax.lax.map(per_batch, jnp.arange(B))
+
+    counts = jnp.sum(any_live, axis=-1).astype(jnp.int32)
+    order = jnp.argsort(~any_live, axis=-1, stable=True)  # live blocks first
+    kv_indices = order.astype(jnp.int32)
+    is_full = jnp.take_along_axis(all_live, order, axis=-1)
+    return BlockMask(kv_num_blocks=counts, kv_indices=kv_indices,
+                     is_full=is_full, q_block=q_block, kv_block=kv_block)
+
+
+def causal_block_mask(Q: int, K: int, q_block: int = 128, kv_block: int = 128,
+                      window: int = 0) -> BlockMask:
+    """Analytic fast path (no mask evaluation) for causal / sliding-window."""
+    nq = -(-Q // q_block)
+    nk = -(-K // kv_block)
+    qb = np.arange(nq)
+    q_lo = qb * q_block
+    q_hi = np.minimum(q_lo + q_block, Q) - 1
+    # kv block kb spans [kb*kv_block, kb*kv_block + kv_block)
+    hi_block = q_hi // kv_block  # last block any q in this row can see
+    if window > 0:
+        lo_pos = np.maximum(q_lo - window + 1, 0)
+        lo_block = lo_pos // kv_block
+    else:
+        lo_block = np.zeros_like(qb)
+    counts = (hi_block - lo_block + 1).astype(np.int32)
+    max_blocks = nk
+    kv_indices = np.zeros((nq, max_blocks), np.int32)
+    is_full = np.zeros((nq, max_blocks), bool)
+    for i in range(nq):
+        idx = np.arange(lo_block[i], hi_block[i] + 1)
+        kv_indices[i, : counts[i]] = idx
+        # a tile is full iff its last kv pos <= first q pos (causal interior)
+        # and (no window) its first kv pos > q_hi - window
+        tile_last = idx * kv_block + kv_block - 1
+        tile_first = idx * kv_block
+        full = tile_last <= q_lo[i]
+        if window > 0:
+            full &= tile_first >= q_hi[i] - window + 1
+        is_full[i, : counts[i]] = full
+    return BlockMask(
+        kv_num_blocks=jnp.asarray(counts), kv_indices=jnp.asarray(kv_indices),
+        is_full=jnp.asarray(is_full), q_block=q_block, kv_block=kv_block,
+    )

@@ -1,0 +1,2 @@
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.dataset import lm_batches, synthetic_batches, text_to_ids

@@ -1,0 +1,23 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    current_mesh,
+    current_rules,
+    logical_shard,
+    logical_spec,
+    logical_sharding,
+    make_param_shardings,
+    use_mesh,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "current_mesh",
+    "current_rules",
+    "logical_shard",
+    "logical_spec",
+    "logical_sharding",
+    "make_param_shardings",
+    "use_mesh",
+]

@@ -1,0 +1,258 @@
+"""Distributed paged-decode attention + cache writes (shard_map wrappers).
+
+GSPMD cannot know that block-table gathers are shard-local, so the paged
+pools + tables enter explicit ``shard_map`` regions here.  Three schemes
+(DESIGN.md §4):
+
+  * ``tp``  — vLLM-faithful tensor parallelism: batch over (pod, data),
+    q *and* kv heads over "model" (requires n_kv_heads % model == 0);
+    page pools private per data shard.
+  * ``dp``  — for *windowed* (bounded-ring) layers: pool sharded over the
+    batch axes only, kv replicated over "model", q-head-groups over
+    "model".  The ring is small, so replication beats striping.
+  * ``kvp`` — flash-decoding on the mesh (beyond-paper): the page dim is
+    round-robin *striped* over every mesh axis not used for batch; each
+    shard computes a partial online-softmax over its local pages and the
+    partials merge with a numerically-stable (m, l, o) psum combine.
+    Works for any GQA layout and is what makes batch=1 × 524k-token decode
+    shardable at all.
+
+Table layout contract: tables are (B, n_kv_shards, pages_per_shard); under
+``kvp`` local slot j of kv-shard s holds logical page j·n_kv_shards + s.
+Under ``tp``/``dp``/local, n_kv_shards == 1 and slots are logical pages.
+
+Outside a mesh context every wrapper is a plain local call (CPU engine).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+try:
+    from jax import shard_map as _shard_map  # jax >= 0.8 (check_vma kwarg)
+
+    def shard_map(f, mesh, in_specs, out_specs, check_rep=False):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_rep)
+except ImportError:  # pragma: no cover — older jax
+    from jax.experimental.shard_map import shard_map
+
+from repro.core import attention as core_attn
+from repro.core import cache as kvcache
+from repro.distributed.sharding import current_mesh
+
+
+def _flat_axis_index(axes: Tuple[str, ...]) -> jax.Array:
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _mesh_prod(mesh, axes: Tuple[str, ...]) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return math.prod(sizes[a] for a in axes) if axes else 1
+
+
+def decode_attention_sharded(
+    q4: jax.Array,  # (B, Hkv, G, hd) — q heads grouped by kv head
+    k_pages: jax.Array,  # (num_pages, P, Hkv, hd)
+    v_pages: jax.Array,
+    tables: jax.Array,  # (B, n_kv_shards, pages_per_shard) int32
+    lens: jax.Array,  # (B,)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scheme: str = "local",  # local | tp | dp | kvp
+    batch_axes: Tuple[str, ...] = (),
+    impl: str = "ref",
+    interpret: bool = True,
+    kv_scale: float = 0.0,  # >0: int8 pools with this dequant step
+) -> jax.Array:
+    """Returns (B, Hkv, G, hd)."""
+    mesh = current_mesh()
+
+    def _local(q4, k_pages, v_pages, tables, lens, kv_psum_axes=(),
+               page_stride=1, page_offset=0):
+        b, nk, g, d = q4.shape
+        q = q4.reshape(b, nk * g, d)
+        t = tables.reshape(b, -1)
+        o = core_attn.decode_attention(
+            q, k_pages, v_pages, t, lens, window=window, softcap=softcap,
+            impl=impl, kv_psum_axes=kv_psum_axes, page_stride=page_stride,
+            page_offset=page_offset, interpret=interpret, kv_scale=kv_scale)
+        return o.reshape(b, nk, g, d)
+
+    if mesh is None or scheme == "local":
+        return _local(q4, k_pages, v_pages, tables, lens)
+
+    ba = tuple(batch_axes) or None
+
+    if scheme == "tp":
+        in_specs = (P(ba, "model", None, None),
+                    P(ba, None, "model", None), P(ba, None, "model", None),
+                    P(ba, None, None), P(ba))
+        fn = shard_map(_local, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(ba, "model", None, None), check_rep=False)
+        return fn(q4, k_pages, v_pages, tables, lens)
+
+    if scheme == "dp":
+        # shard q-head groups over "model" when divisible; otherwise the
+        # bounded-window attention is cheap enough to replicate (e.g.
+        # nemotron-15b's G=6 on a 16-wide model axis)
+        msize = _mesh_prod(mesh, ("model",)) if "model" in mesh.axis_names else 1
+        g_ax = "model" if q4.shape[2] % max(msize, 1) == 0 else None
+        in_specs = (P(ba, None, g_ax, None),
+                    P(ba, None, None, None), P(ba, None, None, None),
+                    P(ba, None, None), P(ba))
+        fn = shard_map(_local, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(ba, None, g_ax, None), check_rep=False)
+        return fn(q4, k_pages, v_pages, tables, lens)
+
+    # ---- kvp ---------------------------------------------------------------
+    kv_axes = tuple(a for a in mesh.axis_names if a not in (batch_axes or ()))
+    n_kv = _mesh_prod(mesh, kv_axes)
+    page_axes = tuple(batch_axes) + kv_axes
+
+    def _kvp(q4, k_pages, v_pages, tables, lens):
+        return _local(q4, k_pages, v_pages, tables, lens,
+                      kv_psum_axes=kv_axes, page_stride=n_kv,
+                      page_offset=_flat_axis_index(kv_axes))
+
+    in_specs = (P(ba, None, None, None),
+                P(page_axes, None, None, None), P(page_axes, None, None, None),
+                P(ba, kv_axes, None), P(ba))
+    fn = shard_map(_kvp, mesh=mesh, in_specs=in_specs,
+                   out_specs=P(ba, None, None, None), check_rep=False)
+    return fn(q4, k_pages, v_pages, tables, lens)
+
+
+def write_prefill_sharded(
+    k_pages_l: jax.Array,  # (num_pages, P, Hkv, hd)
+    v_pages_l: jax.Array,
+    tables: jax.Array,  # (B, max_pages) — pool-shard-local physical ids
+    k: jax.Array,  # (B, S, Hkv, hd)
+    v: jax.Array,
+    lens: jax.Array,
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter a prompt's K/V into the paged pools, shard-locally.
+
+    Under GSPMD the pool scatter all-gathers every update row to every
+    device (measured 8 GiB/device/layer on 32k prefill — the dominant
+    prefill collective).  Here the pools are sharded (pages × batch-axes,
+    head_dim × "model") and each shard scatters only its local rows: the
+    only collective left is the reshard of k/v into that layout (an
+    all-to-all of one KV slice).  Decode's kvp layout differs (pages
+    striped over "model"); the prefill→decode pool reshard is the
+    disaggregated-serving phase boundary (DESIGN.md §4).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return kvcache.write_layer_prefill(k_pages_l, v_pages_l, tables,
+                                           k, v, lens, window=window)
+    from repro.distributed.sharding import current_rules
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ba = tuple(a for a in (current_rules().physical("batch") or ())
+               if a in sizes and k.shape[0] % sizes[a] == 0)
+    hd_ax = ("model" if "model" in sizes
+             and k.shape[-1] % sizes["model"] == 0 else None)
+    ba_s = ba or None
+
+    def _local(kp, vp, tbl, k, v, lens):
+        return kvcache.write_layer_prefill(kp, vp, tbl, k, v, lens,
+                                           window=window)
+
+    fn = shard_map(
+        _local, mesh,
+        in_specs=(P(ba_s, None, None, hd_ax), P(ba_s, None, None, hd_ax),
+                  P(ba_s, None), P(ba_s, None, None, hd_ax),
+                  P(ba_s, None, None, hd_ax), P(ba_s)),
+        out_specs=(P(ba_s, None, None, hd_ax), P(ba_s, None, None, hd_ax)),
+        check_rep=False)
+    return fn(k_pages_l, v_pages_l, tables, k, v, lens)
+
+
+def write_decode_sharded(
+    k_pages: jax.Array,  # (num_pages, P, Hkv, hd)
+    v_pages: jax.Array,
+    tables: jax.Array,  # (B, n_kv_shards, pages_per_shard)
+    positions: jax.Array,  # (B,) — 0-based position of the incoming token
+    k_new: jax.Array,  # (B, Hkv, hd)
+    v_new: jax.Array,
+    *,
+    window: int = 0,
+    scheme: str = "local",
+    batch_axes: Tuple[str, ...] = (),
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter one new token per sequence into the (sharded) pools."""
+    mesh = current_mesh()
+    page_size = k_pages.shape[1]
+
+    def _scatter(kp, vp, phys, off, k, v):
+        oob = jnp.where(phys < 0, kp.shape[0], phys)
+        return (kp.at[oob, off].set(k, mode="drop"),
+                vp.at[oob, off].set(v, mode="drop"))
+
+    def _local(kp, vp, tbl, pos, k, v, stride=1, offset=0):
+        logical = pos // page_size
+        if window > 0:
+            ring = -(-window // page_size) + 1
+            logical = logical % ring
+        if stride == 1:
+            slot = logical
+            mine = jnp.ones_like(pos, dtype=bool)
+        else:
+            slot = logical // stride
+            mine = (logical % stride) == offset
+        t = tbl.reshape(tbl.shape[0], -1)
+        phys = jnp.where(mine, jnp.take_along_axis(
+            t, slot[:, None], axis=1)[:, 0], -1)
+        return _scatter(kp, vp, phys, pos % page_size, k, v)
+
+    if mesh is None or scheme == "local":
+        return _local(k_pages, v_pages, tables, positions, k_new, v_new)
+
+    ba = tuple(batch_axes) or None
+
+    if scheme == "tp":
+        in_specs = (P(ba, None, "model", None), P(ba, None, "model", None),
+                    P(ba, None, None), P(ba),
+                    P(ba, "model", None), P(ba, "model", None))
+        out_specs = (P(ba, None, "model", None), P(ba, None, "model", None))
+        fn = shard_map(_local, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+        return fn(k_pages, v_pages, tables, positions, k_new, v_new)
+
+    if scheme == "dp":
+        in_specs = (P(ba, None, None, None), P(ba, None, None, None),
+                    P(ba, None, None), P(ba),
+                    P(ba, None, None), P(ba, None, None))
+        out_specs = (P(ba, None, None, None), P(ba, None, None, None))
+        fn = shard_map(_local, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+        return fn(k_pages, v_pages, tables, positions, k_new, v_new)
+
+    # kvp: only the owning stripe shard commits the write
+    kv_axes = tuple(a for a in mesh.axis_names if a not in (batch_axes or ()))
+    n_kv = _mesh_prod(mesh, kv_axes)
+    page_axes = tuple(batch_axes) + kv_axes
+
+    def _kvp(kp, vp, tbl, pos, k, v):
+        return _local(kp, vp, tbl, pos, k, v, stride=n_kv,
+                      offset=_flat_axis_index(kv_axes))
+
+    in_specs = (P(page_axes, None, None, None), P(page_axes, None, None, None),
+                P(ba, kv_axes, None), P(ba),
+                P(ba, None, None), P(ba, None, None))
+    out_specs = (P(page_axes, None, None, None),
+                 P(page_axes, None, None, None))
+    fn = shard_map(_kvp, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    return fn(k_pages, v_pages, tables, positions, k_new, v_new)

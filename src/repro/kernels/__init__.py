@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+paged_attention/ — fused paged decode attention (the paper's core kernel)
+flex_attention/  — flash-style prefill kernel with FlexAttention mask/score
+                   mods and BlockMask-driven tile skipping
+Each has ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle).
+"""

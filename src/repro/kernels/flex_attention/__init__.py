@@ -1,0 +1,4 @@
+from repro.kernels.flex_attention.ops import flex_attention
+from repro.kernels.flex_attention.ref import flex_attention_ref
+
+__all__ = ["flex_attention", "flex_attention_ref"]

@@ -1,0 +1,73 @@
+"""Public op: flex attention (prefill / training path).
+
+Dispatches between the Pallas kernel and the jnp oracle; builds (or accepts
+a cached) BlockMask.  This op + the paged decode op together are the paper's
+"fused attention kernel" surface.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flex
+from repro.kernels.flex_attention.flex_attention import flex_attention_kernel
+from repro.kernels.flex_attention.ref import flex_attention_ref
+
+
+def flex_attention(
+    q: jax.Array,  # (B, H, Q, D)
+    k: jax.Array,  # (B, Hkv, K, D)
+    v: jax.Array,
+    *,
+    mask_mod: flex.MaskMod = flex.causal_mask,
+    score_mod: Optional[flex.ScoreMod] = None,
+    block_mask: Optional[flex.BlockMask] = None,
+    scale: Optional[float] = None,
+    window: int = 0,
+    impl: str = "pallas",
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, Q, D = q.shape
+    K = k.shape[2]
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(D))
+
+    if impl == "ref":
+        return flex_attention_ref(q, k, v, mask_mod=mask_mod,
+                                  score_mod=score_mod, scale=scale)
+
+    q_block = min(q_block, Q)
+    kv_block = min(kv_block, K)
+    if block_mask is None:
+        # analytic fast path for the two structural masks we know; generic
+        # mods go through the streaming builder (never materialises QxK)
+        if mask_mod is flex.causal_mask:
+            block_mask = flex.causal_block_mask(Q, K, q_block, kv_block)
+        elif window > 0:
+            block_mask = flex.causal_block_mask(Q, K, q_block, kv_block,
+                                                window=window)
+        else:
+            # aux-carrying mods may be batch-dependent (padding/document
+            # masks) → build a per-batch block mask, like FlexAttention's
+            # create_block_mask(B=...)
+            batched = isinstance(mask_mod, flex.AuxMod)
+            block_mask = flex.build_block_mask(
+                mask_mod, Q, K, q_block, kv_block, B=B if batched else None)
+
+    pad_q = -Q % block_mask.q_block
+    pad_k = -K % block_mask.kv_block
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    out = flex_attention_kernel(
+        q, k, v, block_mask, scale=scale, mask_mod=mask_mod,
+        score_mod=score_mod, q_len=Q, kv_len=K, interpret=interpret)
+    return out[:, :, :Q]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the flex prefill attention kernel.
+
+Materialises the mask mod over the full (Q, K) index space and runs dense
+softmax attention with the score mod applied — numerically what the fused
+kernel must reproduce (FlexAttention semantics).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flex
+
+
+def flex_attention_ref(
+    q: jax.Array,  # (B, H, Q, D)
+    k: jax.Array,  # (B, Hkv, K, D)
+    v: jax.Array,  # (B, Hkv, K, D)
+    *,
+    mask_mod: flex.MaskMod = flex.causal_mask,
+    score_mod: Optional[flex.ScoreMod] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, Q, D = q.shape
+    Hkv, K = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    qg = q.reshape(B, Hkv, G, Q, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+
+    bi = jnp.arange(B)[:, None, None, None]
+    hi = jnp.arange(H).reshape(Hkv, G)[None, :, :, None, None]
+    qi = jnp.arange(Q)[None, None, None, :, None]
+    ki = jnp.arange(K)[None, None, None, None, :]
+    if score_mod is not None:
+        s = score_mod(s, bi[..., None], hi, qi, ki)
+    m = mask_mod(bi[..., None], hi, qi, ki)
+    s = jnp.where(m, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, Q, D).astype(q.dtype)

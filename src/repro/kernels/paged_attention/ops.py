@@ -1,0 +1,57 @@
+"""Public op: paged decode attention (kernel or oracle, GQA-aware).
+
+`paged_attention(...)` is the drop-in attention-over-pages op the rest of
+the framework calls.  ``impl="pallas"`` runs the Pallas kernel
+(interpret-mode on CPU, compiled on real TPU); ``impl="ref"`` runs the
+pure-jnp oracle (also the dry-run lowering path — see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "softcap", "impl", "interpret",
+                     "kv_scale"),
+)
+def paged_attention(
+    q: jax.Array,  # (B, n_heads, head_dim)
+    k_pages: jax.Array,  # (num_pages, page_size, n_kv_heads, head_dim)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages)
+    lens: jax.Array,  # (B,)
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,
+    softcap: float = 0.0,
+    impl: str = "pallas",
+    interpret: bool = True,
+    kv_scale: float = 0.0,  # >0: int8 pools, dequantized on the fly
+) -> jax.Array:
+    """Attention of one query token per sequence over its paged KV cache."""
+    B, n_heads, head_dim = q.shape
+    n_kv = k_pages.shape[2]
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(head_dim))
+
+    if impl == "ref":
+        return paged_attention_ref(
+            q, k_pages, v_pages, block_tables, lens,
+            scale=scale, window=window, softcap=softcap, kv_scale=kv_scale)
+
+    G = n_heads // n_kv
+    qg = q.reshape(B, n_kv, G, head_dim)
+    out = paged_attention_kernel(
+        qg, k_pages, v_pages, block_tables, lens,
+        scale=scale, window=window, softcap=softcap, interpret=interpret,
+        kv_scale=kv_scale)
+    return out.reshape(B, n_heads, head_dim)

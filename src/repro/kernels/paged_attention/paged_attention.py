@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: fused paged decode attention.
+
+TPU adaptation of the paper's FlexAttention-fused PagedAttention (§III-B).
+On GPU the fused kernel gathers scattered KV through `mask_mod` indexing;
+on TPU random gathers inside a kernel are slow, so instead the *grid* walks
+pages and the block table is a **scalar-prefetch operand**: the page→HBM
+translation happens in the BlockSpec ``index_map``, so the Pallas pipeline's
+DMA engine streams exactly the live pages HBM→VMEM, double-buffered, with no
+gather materialisation (DESIGN.md §2, A1).  Because physical pages are
+scattered, each grid step fetches exactly one page (the pipeline still
+overlaps the next page's DMA with this page's compute).
+
+Grid: (batch, kv_heads, max_pages)  — pages innermost so the online-softmax
+accumulators for one (b, h) persist in VMEM scratch across page steps.
+
+Block shapes (VMEM working set, MXU-aligned when head_dim is 128):
+  q    : (1, 1, q_per_kv, head_dim)   — the decode token's q-head group
+  k/v  : (1, page_size, 1, head_dim)  — one physical page
+  out  : (1, 1, q_per_kv, head_dim)
+
+Pages whose first token is past the sequence length are skipped with
+``pl.when`` (no FLOPs; the DMA for their duplicate-clamped page still lands
+but is O(page) — the wrapper clamps dead table entries to page 0).
+The sliding-window variant masks by ring-slot position (bounded cache).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    # scalar prefetch
+    tables_ref,  # (B, max_pages) int32 (clamped to valid page ids)
+    lens_ref,  # (B,) int32
+    # inputs
+    q_ref,  # (1, 1, G, D)
+    k_ref,  # (1, P, 1, D)
+    v_ref,  # (1, P, 1, D)
+    # outputs
+    o_ref,  # (1, 1, G, D)
+    # scratch
+    m_ref,  # (G, 1) f32
+    l_ref,  # (G, 1) f32
+    acc_ref,  # (G, D) f32
+    *,
+    scale: float,
+    window: int,
+    softcap: float,
+    kv_scale: float = 0.0,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    n_pb = pl.num_programs(2)
+    page_size = k_ref.shape[1]
+    D = q_ref.shape[3]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    L = lens_ref[b]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (page_size,), 0)
+    if window > 0:
+        ring = -(-window // page_size) + 1
+        # ring slot → logical position (see ref.ring_slot_positions)
+        cur_page = jnp.maximum(L - 1, 0) // page_size
+        lpage = cur_page - ((cur_page - p) % ring)
+        pos = lpage * page_size + slot
+        pos = jnp.where(pos >= L, pos - ring * page_size, pos)
+        live = (pos >= 0) & (pos < L) & (pos >= L - window)
+        page_live = p < ring
+    else:
+        pos = p * page_size + slot
+        live = pos < L
+        page_live = p * page_size < L
+
+    @pl.when(page_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (P, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if kv_scale > 0:  # int8 pages: dequantize the VMEM tile in-register
+            k = k * kv_scale
+            v = v * kv_scale
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, P)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(live[None, :], s, NEG_INF)
+
+        m_prev = m_ref[...]  # (G, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.where(live[None, :], jnp.exp(s - m_new), 0.0)  # (G, P)
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pb - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(
+    q: jax.Array,  # (B, n_kv, G, D) — q heads grouped by kv head
+    k_pages: jax.Array,  # (num_pages, P, n_kv, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages) int32 (may contain -1)
+    lens: jax.Array,  # (B,)
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = True,
+    kv_scale: float = 0.0,
+) -> jax.Array:
+    B, n_kv, G, D = q.shape
+    num_pages, page_size, _, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+
+    tables = jnp.clip(block_tables, 0, num_pages - 1).astype(jnp.int32)
+
+    def q_map(b, h, p, tables, lens):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, p, tables, lens):
+        del lens
+        return (tables[b, p], 0, h, 0)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               softcap=softcap, kv_scale=kv_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, n_kv, max_pages),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), q_map),
+                pl.BlockSpec((1, page_size, 1, D), kv_map),
+                pl.BlockSpec((1, page_size, 1, D), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, n_kv, G, D), q.dtype),
+        interpret=interpret,
+    )(tables, lens.astype(jnp.int32), q, k_pages, v_pages)

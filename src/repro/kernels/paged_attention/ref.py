@@ -1,0 +1,84 @@
+"""Pure-jnp oracle for the paged decode-attention kernel.
+
+Implements Alg.1 GATHER + standard masked attention: materialise each
+sequence's K/V from its pages, then softmax(q·Kᵀ)·V.  This is the
+"numerical equivalence" baseline the paper validates against (§IV-B3).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ring_slot_positions(lens: jax.Array, page_size: int, ring: int,
+                        n_slots: int) -> jax.Array:
+    """Logical position held by each ring slot for a sliding-window cache.
+
+    Slot s = (page j, offset o) holds the *latest* position p with
+    (p // page_size) % ring == j and p % page_size == o and p < len.
+    Returns (B, n_slots) positions (may exceed len-1 → dead, mask upstream).
+    """
+    s = jnp.arange(n_slots)
+    j = s // page_size  # ring page index
+    o = s % page_size
+    L = lens[:, None]
+    # latest page index l with l % ring == j and l*ps + o < L
+    cur_page = jnp.maximum(L - 1, 0) // page_size
+    # candidate page: largest l <= cur_page with l ≡ j (mod ring)
+    l = cur_page - ((cur_page - j) % ring)
+    pos = l * page_size + o
+    # if that position is >= L, the slot's live token is one ring earlier
+    pos = jnp.where(pos >= L, pos - ring * page_size, pos)
+    return pos  # negative ⇒ slot never written
+
+
+def paged_attention_ref(
+    q: jax.Array,  # (B, n_heads, head_dim) — one query token per sequence
+    k_pages: jax.Array,  # (num_pages, page_size, n_kv_heads, head_dim)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages) int32, NULL = -1
+    lens: jax.Array,  # (B,) int32 — cached tokens incl. the current one
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,  # >0 ⇒ sliding-window over a ring of pages
+    softcap: float = 0.0,
+    kv_scale: float = 0.0,  # >0: int8 pools, dequantize gathered slices
+) -> jax.Array:
+    B, n_heads, head_dim = q.shape
+    num_pages, page_size, n_kv, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    S = max_pages * page_size
+    scale = scale if scale is not None else 1.0 / np.sqrt(head_dim)
+
+    safe = jnp.clip(block_tables, 0, num_pages - 1)
+    # barrier: pin dtype converts to the gathered slice, not the pool
+    # (see core/attention.py — CPU float-normalization artifact)
+    k = jax.lax.optimization_barrier(k_pages[safe].reshape(B, S, n_kv, head_dim))
+    v = jax.lax.optimization_barrier(v_pages[safe].reshape(B, S, n_kv, head_dim))
+    if kv_scale > 0:
+        k = (k.astype(jnp.float32) * kv_scale).astype(q.dtype)
+        v = (v.astype(jnp.float32) * kv_scale).astype(q.dtype)
+
+    if window > 0:
+        ring = -(-window // page_size) + 1
+        pos = ring_slot_positions(lens, page_size, ring, S)  # (B, S)
+        live = (pos >= 0) & (pos < lens[:, None]) & (pos >= lens[:, None] - window)
+    else:
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        live = pos < lens[:, None]
+    live &= (block_tables >= 0)[:, :, None].repeat(page_size, 2).reshape(B, S)
+
+    g = n_heads // n_kv
+    qg = q.reshape(B, n_kv, g, head_dim) * scale
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(q.dtype))
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(live[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(q.dtype))
+    return out.reshape(B, n_heads, head_dim)

@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_XLA_EXTRA", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: prove every (arch × shape × mesh) lowers + compiles.
+
+For one pair this script:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. lowers + compiles the step (train_step / prefill / serve_step) with
+     the Plan's explicit shardings — ShapeDtypeStructs only, no allocation,
+  3. records memory_analysis (the fits-proof), cost_analysis, and the
+     HLO-parsed per-collective bytes,
+  4. re-lowers L1/L2 reduced-depth variants for the scan-body cost
+     correction (DESIGN.md §7), and emits the corrected roofline terms.
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>[__tag].json.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --mesh pod
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config, make_run
+from repro.configs.base import ModelConfig, RunConfig
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_step, plan_for
+
+SKIPS = {
+    # (arch, shape): reason — recorded, not silently dropped
+    ("whisper-medium", "long_500k"):
+        "decoder is bounded by design (448 positions; enc-dec cross-attn "
+        "is fixed-length) — a 524k-token decoder context is architecturally "
+        "meaningless (DESIGN.md §5)",
+}
+
+# archs that need the sliding-window variant to make long_500k sub-quadratic
+SWA_FOR_LONG = {"nemotron-4-340b", "nemotron-4-15b", "llama3-405b",
+                "granite-8b", "granite-moe-1b-a400m", "olmoe-1b-7b",
+                "llama-3.2-vision-11b", "llama2-7b"}
+
+
+def make_run_for(arch: str, shape: str) -> Optional[RunConfig]:
+    if (arch, shape) in SKIPS:
+        return None
+    variant = "swa" if (shape == "long_500k" and arch in SWA_FOR_LONG) else "base"
+    cfg = get_config(arch)
+    if shape == "train_4k" and cfg.remat == "none":
+        cfg = cfg.replace(remat="full")
+    return make_run(cfg, shape, variant=variant)
+
+
+def reduced_depth(cfg: ModelConfig, n_units: int) -> ModelConfig:
+    """Same config with n_units layer groups (for the L1/L2 correction)."""
+    unit = len(cfg.layer_pattern)
+    rem = cfg.n_layers % unit
+    # scan_unroll: the probes must compile loop-free — XLA cost_analysis
+    # counts a while body once regardless of trip count, so a scanned L1/L2
+    # pair would report delta≈0 (DESIGN.md §7)
+    updates: Dict[str, Any] = {"n_layers": n_units * unit + rem,
+                               "scan_unroll": True}
+    if cfg.n_encoder_layers:
+        updates["n_encoder_layers"] = n_units
+    return cfg.replace(**updates)
+
+
+def n_groups_of(cfg: ModelConfig) -> int:
+    return cfg.n_layers // len(cfg.layer_pattern)
+
+
+def run_pair(arch: str, shape: str, multi_pod: bool,
+             microbatches: Optional[int] = None,
+             scheme: Optional[str] = None,
+             attn_impl: str = "chunked",
+             tag: str = "", with_correction: bool = True,
+             overrides: Optional[Dict[str, Any]] = None,
+             seq_parallel: bool = True,
+             ws_decode: bool = False,
+             ring: bool = False,
+             zero_pod: bool = False) -> Dict[str, Any]:
+    run = make_run_for(arch, shape)
+    if run is not None and overrides:
+        run = RunConfig(model=run.model.replace(**overrides),
+                        seq_len=run.seq_len, global_batch=run.global_batch,
+                        kind=run.kind, variant=run.variant)
+    mesh_name = "multipod" if multi_pod else "pod"
+    out: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "tag": tag}
+    if run is None:
+        out["status"] = "skipped"
+        out["reason"] = SKIPS[(arch, shape)]
+        return out
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    plan = plan_for(run, mesh, microbatches=microbatches, scheme=scheme,
+                    attn_impl=attn_impl, seq_parallel=seq_parallel,
+                    ws_decode=ws_decode, ring=ring, zero_pod=zero_pod)
+    out["plan"] = {"batch_axes": plan.batch_axes, "scheme": plan.scheme,
+                   "kv_axes": plan.kv_axes, "microbatches": plan.microbatches,
+                   "variant": run.variant,
+                   "rules": {k: v for k, v in plan.rules.table.items()
+                             if v is not None}}
+
+    t0 = time.time()
+    lowered, _ = lower_step(run, plan)
+    compiled = lowered.compile()
+    out["compile_s"] = round(time.time() - t0, 1)
+    out["memory"] = ha.memory_stats(compiled)
+    out["cost_full"] = ha.extract_cost(compiled)
+    hlo = compiled.as_text()
+    out["collectives_full"] = ha.collective_bytes(hlo)
+    shadow = ha.f32_shadow_bytes(hlo)
+    out["f32_shadow"] = shadow
+    # TPU-estimated peak: CPU peak minus the largest CPU-only f32 shadow
+    # buffer (conservative; see hlo_analysis.f32_shadow_bytes)
+    out["memory"]["peak_bytes_tpu_est"] = (out["memory"]["peak_bytes"]
+                                           - shadow["max"])
+    out["status"] = "ok"
+
+    if with_correction:
+        # L1/L2 delta correction for scan-body costs
+        costs = {}
+        for n_units in (1, 2):
+            cfg_n = reduced_depth(run.model, n_units)
+            run_n = RunConfig(model=cfg_n, seq_len=run.seq_len,
+                              global_batch=run.global_batch, kind=run.kind,
+                              variant=run.variant)
+            # probes run microbatches=1: the grad-accumulation scan is a
+            # while loop too (cost counted once) — totals are mb-invariant
+            plan_n = plan_for(run_n, mesh, microbatches=1,
+                              scheme=scheme, attn_impl=attn_impl,
+                              seq_parallel=seq_parallel,
+                              ws_decode=ws_decode, ring=ring,
+                              zero_pod=zero_pod)
+            low_n = lower_step(run_n, plan_n)[0]
+            comp_n = low_n.compile()
+            costs[n_units] = {
+                **ha.extract_cost(comp_n),
+                "coll": ha.collective_bytes(comp_n.as_text())["total"],
+            }
+        n = n_groups_of(run.model)
+        c1, c2 = costs[1], costs[2]
+        corrected = {
+            "flops": c1["flops"] + (n - 1) * (c2["flops"] - c1["flops"]),
+            "bytes": c1["bytes"] + (n - 1) * (c2["bytes"] - c1["bytes"]),
+            "coll_bytes": c1["coll"] + (n - 1) * (c2["coll"] - c1["coll"]),
+            "n_groups": n,
+        }
+        out["cost_l1"] = c1
+        out["cost_l2"] = c2
+        out["cost_corrected"] = corrected
+
+        terms = ha.roofline_terms(corrected["flops"], corrected["bytes"],
+                                  corrected["coll_bytes"])
+        n_tokens = (run.global_batch * run.seq_len if run.kind != "decode"
+                    else run.global_batch)
+        mf_total = ha.model_flops(run.model, n_tokens, run.kind)
+        terms["model_flops_per_dev"] = mf_total / n_dev
+        terms["useful_frac"] = (mf_total / n_dev) / max(corrected["flops"], 1.0)
+        out["roofline"] = terms
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--scheme", default=None)
+    ap.add_argument("--attn-impl", default="chunked")
+    ap.add_argument("--override", default="",
+                    help="comma key=val ModelConfig overrides (perf iters), "
+                         "e.g. --override moe_ep=True,remat=none")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-correction", action="store_true")
+    ap.add_argument("--no-seqpar", action="store_true",
+                    help="disable train/prefill sequence parallelism (perf)")
+    ap.add_argument("--zero-pod", action="store_true",
+                    help="ZeRO-1: shard optimizer moments over the pod "
+                         "axis (multipod only)")
+    ap.add_argument("--ring", action="store_true",
+                    help="ring attention (context parallelism) for "
+                         "train/prefill (perf)")
+    ap.add_argument("--ws-decode", action="store_true",
+                    help="weight-stationary decode: psum activation "
+                         "partials instead of gathering FSDP weights (perf)")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
+    shapes = (list(INPUT_SHAPES) if args.shape == "all"
+              else args.shape.split(","))
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    overrides: Dict[str, Any] = {}
+    for kv in (args.override.split(",") if args.override else []):
+        k, v = kv.split("=")
+        if k == "fsdp" and v == "off":
+            overrides["axis_overrides"] = {}  # drop the embed->data FSDP rule
+            continue
+        overrides[k] = {"True": True, "False": False}.get(
+            v, int(v) if v.isdigit() else v)
+
+    os.makedirs(args.outdir, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multipod" if mp else "pod"
+                stem = f"{arch}__{shape}__{mesh_name}"
+                if args.tag:
+                    stem += f"__{args.tag}"
+                try:
+                    res = run_pair(arch, shape, mp,
+                                   microbatches=args.microbatches,
+                                   scheme=args.scheme,
+                                   attn_impl=args.attn_impl, tag=args.tag,
+                                   with_correction=not args.no_correction,
+                                   overrides=overrides or None,
+                                   seq_parallel=not args.no_seqpar,
+                                   ws_decode=args.ws_decode, ring=args.ring,
+                                   zero_pod=args.zero_pod)
+                except Exception as e:  # noqa: BLE001 — recorded, not hidden
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-3000:]}
+                    failures += 1
+                with open(os.path.join(args.outdir, stem + ".json"), "w") as f:
+                    json.dump(res, f, indent=1)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    mem = res["memory"]["peak_bytes"] / 2**30
+                    extra = f" peak={mem:.2f}GiB compile={res['compile_s']}s"
+                    if "roofline" in res:
+                        r = res["roofline"]
+                        extra += (f" bottleneck={r['bottleneck']}"
+                                  f" useful={r['useful_frac']:.2f}")
+                print(f"[{status:>7}] {stem}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} pair(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""HLO-text analysis: collective bytes, cost correction, roofline terms.
+
+``cost_analysis()`` gives per-device FLOPs/bytes but (a) counts while-loop
+(scan) bodies ONCE regardless of trip count, and (b) has no collective
+breakdown.  This module fixes both:
+
+  * ``collective_bytes`` parses the post-SPMD HLO for all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute ops and
+    sums the bytes each moves per device (with the standard ring-algorithm
+    factors).
+  * the L1/L2 *delta correction*: lower the same step with 1 and 2 layer
+    groups; per-group cost = delta; corrected = L1 + (n_groups-1)·delta.
+    This scales FLOPs, bytes, and collective bytes uniformly and works for
+    forward, backward, and optimizer code without instrumenting the scan.
+
+Roofline terms (v5e, DESIGN.md A2):
+    compute    = flops_per_device / 197e12
+    memory     = hbm_bytes_per_device / 819e9
+    collective = ici_bytes_per_device / (n_links · 50e9)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# `%x = bf16[1,2048,128]{2,1,0} all-gather(...)` — capture result type + op
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_OP_RE = re.compile(
+    r"=\s*\((.*?)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_REPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_REPL_GROUPS_V2_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _REPL_GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPL_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved over ICI, by collective kind.
+
+    Ring-algorithm cost model per device:
+      all-gather:        out − in  (receives the other shards)
+      reduce-scatter:    in − out
+      all-reduce:        2 · in · (g−1)/g
+      all-to-all:        in · (g−1)/g
+      collective-permute: in  (one hop)
+    """
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            size = _shape_bytes(dtype, dims)
+        else:
+            m = _TUPLE_OP_RE.search(line)
+            if not m:
+                continue
+            kind = m.group(2)
+            size = sum(_shape_bytes(t.group(1), t.group(2))
+                       for t in _SHAPE_RE.finditer(m.group(1)))
+            # async tuple shapes repeat (in, out); halve to the out estimate
+            size //= 2
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            out[kind] += size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            out[kind] += size * (g - 1) / g
+        elif kind == "all-reduce":
+            out[kind] += 2 * size * (g - 1) / g
+        elif kind == "all-to-all":
+            out[kind] += size * (g - 1) / g
+        else:  # collective-permute
+            out[kind] += size
+    out["total"] = sum(out.values())
+    return out
+
+
+_F32_CONVERT_RE = re.compile(
+    r"%\S+ = f32\[([0-9,]+)\]\S*\s+convert\(%\S*param")
+
+
+def f32_shadow_bytes(hlo_text: str, min_bytes: int = 32 << 20
+                     ) -> Dict[str, float]:
+    """CPU-backend artifact accounting (DESIGN.md §7).
+
+    XLA:CPU's float-normalization pass legalizes bf16 scatter /
+    dynamic-update-slice / dot by upcasting whole operands to f32 — for a
+    layer-stacked KV pool or weight stack that materializes a pool-sized
+    f32 "shadow" buffer that does NOT exist on TPU (native bf16).  We sum
+    the ≥min_bytes f32 convert-of-parameter buffers; ``max`` is the
+    conservative single-buffer correction (XLA reuses shadow buffers, so
+    subtracting the sum would over-correct).
+    """
+    sizes = []
+    for line in hlo_text.splitlines():
+        m = _F32_CONVERT_RE.search(line)
+        if m:
+            b = _shape_bytes("f32", m.group(1))
+            if b >= min_bytes:
+                sizes.append(b)
+    return {"max": float(max(sizes, default=0)),
+            "sum": float(sum(sizes)), "count": float(len(sizes))}
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    ms = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(ms.argument_size_in_bytes),
+        "output_bytes": float(ms.output_size_in_bytes),
+        "temp_bytes": float(ms.temp_size_in_bytes),
+        "alias_bytes": float(ms.alias_size_in_bytes),
+        "peak_bytes": float(ms.argument_size_in_bytes
+                            + ms.output_size_in_bytes
+                            + ms.temp_size_in_bytes
+                            - ms.alias_size_in_bytes),
+    }
+
+
+def roofline_terms(flops: float, hbm_bytes: float, ici_bytes: float,
+                   n_links: int = 4) -> Dict[str, float]:
+    """Per-device seconds for each roofline term (v5e constants)."""
+    t = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": ici_bytes / (n_links * ICI_BW),
+    }
+    t["bottleneck"] = max(("compute_s", "memory_s", "collective_s"),
+                          key=lambda k: t[k])
+    return t
+
+
+def model_flops(cfg, n_tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); 2·N·D for
+    inference-like kinds (no backward)."""
+    from repro.utils.tree import count_params
+    from repro.models.api import build_model
+    import jax
+
+    model = build_model(cfg)
+    spec = model.abstract_params()
+    total = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(spec))
+    if cfg.is_moe:
+        # active = total − (inactive expert params)
+        E, k = cfg.n_experts, cfg.top_k
+        expert = 3 * cfg.d_model * cfg.expert_ff * cfg.n_layers
+        total_expert = E * expert
+        active = total - total_expert + k * expert
+    else:
+        active = total
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active * n_tokens

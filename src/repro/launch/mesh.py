@@ -1,0 +1,26 @@
+"""Production mesh builders (functions, never module-level constants).
+
+Target: TPU v5e. Single pod = 16×16 = 256 chips, mesh ("data", "model").
+Multi-pod = 2 pods = 512 chips, mesh ("pod", "data", "model") — the "pod"
+axis carries pure data parallelism across the inter-pod links.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,60 @@
+"""Model registry + dry-run input specs.
+
+``build_model(cfg)`` returns the family's model object (shared interface:
+init_params / param_axes / abstract_params / forward / loss_fn / prefill /
+decode_step / init_decode_state).
+
+``input_specs(run)`` returns ShapeDtypeStruct stand-ins for every input the
+lowered step function takes (the multi-pod dry-run contract): weak-type
+correct, shardable, zero device allocation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.encdec import EncDecModel
+from repro.models.transformer import TransformerModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    if cfg.family in ("dense", "moe", "vlm", "rglru", "xlstm"):
+        return TransformerModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def input_specs(run: RunConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    """Dry-run stand-ins for the *data* inputs of the step being lowered.
+
+    train:   {"inputs", "targets"} (+ modality stubs)
+    prefill: {"tokens", "lens"}    (+ modality stubs)
+    decode:  {"tokens"}            (state comes from init_decode_state)
+    """
+    cfg = run.model
+    B, S = run.global_batch, run.seq_len
+    tok = lambda shape: jax.ShapeDtypeStruct(shape, jnp.int32)
+
+    out: Dict[str, Any] = {}
+    if run.kind == "train":
+        out["inputs"] = tok((B, S))
+        out["targets"] = tok((B, S))
+    elif run.kind == "prefill":
+        out["tokens"] = tok((B, S))
+        out["lens"] = tok((B,))
+    else:  # decode
+        out["tokens"] = tok((B,))
+
+    # modality frontend stubs (the one allowed carve-out)
+    if cfg.family == "encdec" and run.kind in ("train", "prefill"):
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_audio_frames, cfg.d_model), dtype)
+    if cfg.family == "vlm" and run.kind in ("train", "prefill"):
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_vision), dtype)
+    return out

@@ -1,0 +1,129 @@
+"""Shared neural-net building blocks (pure JAX, no framework deps)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_shard
+from repro.models.spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def norm_spec(cfg: ModelConfig) -> Dict:
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((cfg.d_model,), ("embed",), "ones"),
+                "bias": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+    return {"scale": ParamSpec((cfg.d_model,), ("embed",), "ones")}
+
+
+def apply_norm(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"] + p["bias"]).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * p["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary / sinusoidal positions
+# ---------------------------------------------------------------------------
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., H, D) with matching leading dims on positions (...,)."""
+    if theta <= 0:
+        return x
+    D = x.shape[-1]
+    half = D // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)
+
+
+def sinusoidal_at(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding at dynamic positions (...,) → (..., d).
+
+    Closed-form (no table) so decode positions are unbounded."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = jnp.power(10000.0, -2.0 * dim / d)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+def mlp_spec(cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.activation in ("silu", "gelu"):  # gated (SwiGLU / GeGLU)
+        return {"wg": ParamSpec((d, f), ("embed", "mlp")),
+                "wu": ParamSpec((d, f), ("embed", "mlp")),
+                "wd": ParamSpec((f, d), ("mlp", "embed"))}
+    # relu2 (nemotron squared-ReLU) and gelu_ungated (whisper): 2 matrices
+    return {"wu": ParamSpec((d, f), ("embed", "mlp")),
+            "wd": ParamSpec((f, d), ("mlp", "embed"))}
+
+
+def apply_mlp(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.activation == "silu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(x @ p["wg"]) * (x @ p["wu"])
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["wu"]))
+    elif cfg.activation == "gelu_ungated":
+        h = jax.nn.gelu(x @ p["wu"])
+    else:
+        raise ValueError(cfg.activation)
+    h = logical_shard(h, "batch", *(None,) * (h.ndim - 2), "mlp")
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+def embed_spec(cfg: ModelConfig) -> Dict:
+    out = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        out["head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                ("embed", "vocab"))
+    return out
+
+
+def embed_tokens(p: Dict, tokens: jax.Array) -> jax.Array:
+    x = p["tok"][tokens]
+    seq = ("seq",) if x.ndim == 3 else ()
+    return logical_shard(x, "batch", *seq, "act_embed")
+
+
+def unembed(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = x @ w
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    # vocab (not seq) carries the "model" axis here: the cross-entropy
+    # logsumexp then psums a scalar per token instead of gathering the
+    # (d_model × vocab) head per shard.
+    seq = (None,) if logits.ndim == 3 else ()
+    return logical_shard(logits, "batch", *seq, "vocab")

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded gather
+dispatch (sort-free, scatter/gather based — no dense all-experts compute, so
+compiled FLOPs reflect *active* expert compute, and expert-parallel sharding
+turns the dispatch into an all-to-all on the mesh).
+
+Used by granite-moe (32e top-8) and olmoe (64e top-8).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_shard
+from repro.models.spec import ParamSpec
+
+
+def moe_spec(cfg: ModelConfig) -> Dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    return {
+        "router": ParamSpec((d, E), ("embed", None)),
+        "wg": ParamSpec((E, d, f), ("experts", "embed", None)),
+        "wu": ParamSpec((E, d, f), ("experts", "embed", None)),
+        "wd": ParamSpec((E, f, d), ("experts", None, "embed")),
+    }
+
+
+_FROM_CFG = object()
+
+
+def apply_moe(p: Dict, x: jax.Array, cfg: ModelConfig,
+              capacity_factor=_FROM_CFG
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) or (B, d).  Returns (out, aux_loss).
+
+    ``capacity_factor=None`` → *dropless* (C = T): exact routing, used for
+    inference and correctness tests (a token can contribute at most one of
+    its k choices to any single expert, so C = T suffices).  Training uses a
+    finite factor (Switch-style dropping; the aux loss balances load).
+    """
+    if capacity_factor is _FROM_CFG:
+        capacity_factor = cfg.moe_capacity or None
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[:, None, :]
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = xf @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- load-balance auxiliary loss (Switch/OLMoE style) ------------------
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    one_hot_top1 = jax.nn.one_hot(idx[:, 0], E)
+    ce = jnp.mean(one_hot_top1, axis=0)  # fraction routed (top-1)
+    aux = E * jnp.sum(me * ce)
+
+    # --- capacity-bounded dispatch -----------------------------------------
+    if capacity_factor is None:
+        C = T  # dropless
+    else:
+        C = max(1, int(T * k / E * capacity_factor))
+    assign = idx.reshape(-1)  # (T*k,) expert of each (token, choice)
+    onehot = jax.nn.one_hot(assign, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # rank within expert
+    slot = jnp.sum(pos_in_e * onehot, axis=-1)  # (T*k,)
+    ok = slot < C  # dropped tokens beyond capacity
+
+    token_of = jnp.arange(T).repeat(k)  # (T*k,)
+    # dispatch index buffer: (E, C) → token id (sentinel T = zero row).
+    # dropped entries are routed to an OOB expert index and dropped; live
+    # (assign, slot) pairs are unique by construction, so no write races.
+    disp = jnp.full((E, C), T, jnp.int32)
+    disp = disp.at[jnp.where(ok, assign, E), jnp.where(ok, slot, 0)].set(
+        token_of, mode="drop")
+
+    # gather with clamped indices: empty slots (sentinel T) read an
+    # arbitrary row — their expert outputs are never combined (masked by
+    # ``ok``), avoiding a padded full copy of xf per layer
+    xe = xf[jnp.clip(disp, 0, T - 1)]  # (E, C, d) gather — no matmul FLOPs
+    xe = logical_shard(xe, "experts", None, "act_embed")
+
+    if cfg.activation == "silu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) * \
+            jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) * \
+            jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"])  # (E, C, d)
+    ye = logical_shard(ye, "experts", None, "act_embed")
+
+    # --- combine: weighted scatter-add back to tokens (f32 accumulation,
+    # explicit — a bf16 buffer would silently promote via the f32 gates) ---
+    gates_flat = gate_vals.reshape(-1)  # (T*k,) f32
+    out = jnp.zeros((T + 1, d), jnp.float32)
+    src_e = jnp.where(ok, assign, E)  # OOB → dropped
+    src_c = jnp.where(ok, slot, 0)
+    contrib = (ye[jnp.clip(src_e, 0, E - 1), src_c].astype(jnp.float32)
+               * gates_flat[:, None])
+    contrib = jnp.where(ok[:, None], contrib, 0.0)
+    out = out.at[jnp.where(ok, token_of, T)].add(contrib, mode="drop")
+    out = out[:T].reshape(B, S, d)
+    if squeeze:
+        out = out[:, 0]
+    return out.astype(x.dtype), aux.astype(jnp.float32)

@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = σ(W_a x_t)                    (recurrence gate)
+    i_t = σ(W_x x_t)                    (input gate)
+    a_t = exp(c · softplus(Λ)⁻¹-style log a · r_t)   with a = σ(Λ)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x̃_t)
+
+x̃ is the conv1d(width 4)-mixed input branch.  The full block is Griffin's
+recurrent block: two input projections (recurrent branch + GeLU gate
+branch), temporal conv, RG-LRU, gated merge, output projection.
+
+Training/prefill uses ``jax.lax.associative_scan`` (the recurrence is a
+first-order linear scan — exactly parallelisable, TPU-native; this is the
+recurrent-scan analogue of the paper's "linear latency growth" claim).
+Decode carries (h, conv window) — O(1) state, so long_500k is natural.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import ParamSpec
+
+_C = 8.0  # Griffin's fixed temperature on the log-recurrence
+
+
+def rglru_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv1d_width
+    return {
+        "wx": ParamSpec((d, w), ("embed", "state")),
+        "wy": ParamSpec((d, w), ("embed", "state")),  # GeLU gate branch
+        "conv": ParamSpec((cw, w), (None, "state"), "small_normal"),
+        "conv_b": ParamSpec((w,), ("state",), "zeros"),
+        "wa": ParamSpec((w, w), ("state", None), "small_normal"),
+        "wi": ParamSpec((w, w), ("state", None), "small_normal"),
+        "a_log": ParamSpec((w,), ("state",), "a_log"),
+        "wout": ParamSpec((w, d), ("state", "embed")),
+    }
+
+
+def _gates(p: Dict, xb: jax.Array):
+    """xb: (..., w) conv-mixed branch → (log_a_t, gated input)."""
+    r = jax.nn.sigmoid(xb @ p["wa"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(xb @ p["wi"])
+    log_a = -_C * r * jax.nn.softplus(p["a_log"])  # log a_t  (a_t ∈ (0,1))
+    a2 = jnp.exp(2 * log_a)
+    gated = (jnp.sqrt(jnp.maximum(1 - a2, 1e-12)).astype(xb.dtype) * i * xb)
+    return log_a, gated
+
+
+def rglru_train(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) → (B, S, d) via associative scan over time."""
+    B, S, d = x.shape
+    xb = x @ p["wx"]
+    # temporal conv (causal, width cw)
+    cw = p["conv"].shape[0]
+    pad = jnp.pad(xb, ((0, 0), (cw - 1, 0), (0, 0)))
+    xc = sum(pad[:, i:i + S] * p["conv"][i] for i in range(cw)) + p["conv_b"]
+
+    log_a, gated = _gates(p, xc)
+
+    # h_t = a_t h_{t-1} + b_t  — associative first-order scan
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b1 * jnp.exp(a2).astype(b1.dtype) + b2
+
+    la, h = jax.lax.associative_scan(combine, (log_a, gated), axis=1)
+    del la
+    y = jax.nn.gelu(x @ p["wy"])
+    return (h * y) @ p["wout"]
+
+
+def rglru_init_state(B: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((B, w), dtype),
+            "conv": jnp.zeros((B, cfg.conv1d_width - 1, w), dtype)}
+
+
+def rglru_decode(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict]:
+    """One step.  x: (B, d)."""
+    xb = x @ p["wx"]  # (B, w)
+    hist = jnp.concatenate([state["conv"], xb[:, None]], axis=1)  # (B,cw,w)
+    xc = jnp.einsum("bcw,cw->bw", hist, p["conv"]) + p["conv_b"]
+    log_a, gated = _gates(p, xc)
+    h = state["h"] * jnp.exp(log_a).astype(x.dtype) + gated
+    y = jax.nn.gelu(x @ p["wy"])
+    out = (h * y) @ p["wout"]
+    return out, {"h": h, "conv": hist[:, 1:]}

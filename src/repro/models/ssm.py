@@ -1,0 +1,193 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+Attention-free — no KV cache, O(1) recurrent state per layer
+(DESIGN.md §Arch-applicability: the paper's paged-KV technique does not
+apply; decode cost is constant in context length, which is exactly the
+regime long_500k probes).
+
+mLSTM recurrence (heads h, key dim dk, value dim dv):
+    C_t = f_t·C_{t-1} + i_t·(v_t k_tᵀ)      C: (h, dv, dk)
+    n_t = f_t·n_{t-1} + i_t·k_t             n: (h, dk)
+    y_t = (C_t q_t) / max(|n_tᵀ q_t|, 1)
+with exp input gate and sigmoid-ish forget gate, stabilised by the running
+max m_t (log-space).  Training/prefill uses the *parallel quadratic form*
+(decay matrix D in log space — the standard chunk-free TPU-friendly
+formulation; matmul-shaped for the MXU); decode uses the recurrence.
+
+sLSTM: true sequential recurrence (h_{t-1} feedback) — lax.scan over time.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import ParamSpec
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+def mlstm_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H, dh = _dims(cfg)
+    return {
+        "wq": ParamSpec((d, H, dh), ("embed", "heads", None)),
+        "wk": ParamSpec((d, H, dh), ("embed", "heads", None)),
+        "wv": ParamSpec((d, H, dh), ("embed", "heads", None)),
+        "wi": ParamSpec((d, H), ("embed", "heads"), "small_normal"),
+        "wf": ParamSpec((d, H), ("embed", "heads"), "small_normal"),
+        "bf": ParamSpec((H,), ("heads",), "ones"),
+        "wo": ParamSpec((H, dh, d), ("heads", None, "embed")),
+        "ogate": ParamSpec((d, H, dh), ("embed", "heads", None)),
+    }
+
+
+def mlstm_train(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Parallel (quadratic) form.  x: (B, S, d) → (B, S, d)."""
+    B, S, d = x.shape
+    H, dh = _dims(cfg)
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"]) / jnp.sqrt(dh).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    logi = (jnp.einsum("bsd,dh->bhs", x, p["wi"])).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bhs", x, p["wf"]).astype(jnp.float32)
+        + p["bf"][None, :, None])
+
+    # D_ij = exp( Σ_{l=j+1..i} logf_l + logi_j ), lower-triangular
+    F = jnp.cumsum(logf, axis=-1)  # (B, H, S)
+    logD = F[..., :, None] - F[..., None, :] + logi[..., None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(mask, logD, -jnp.inf)
+    m = jnp.max(logD, axis=-1, keepdims=True)  # row-wise stabiliser
+    m = jnp.maximum(m, 0.0)
+    D = jnp.exp(logD - m)  # (B, H, S, S)
+
+    s = jnp.einsum("bhsk,bhtk->bhst", q, k).astype(jnp.float32) * D
+    n = jnp.maximum(jnp.abs(jnp.sum(s, axis=-1, keepdims=True)),
+                    jnp.exp(-m))
+    w = (s / n).astype(x.dtype)
+    y = jnp.einsum("bhst,bhtk->bhsk", w, v)
+    o = jax.nn.silu(jnp.einsum("bsd,dhk->bhsk", x, p["ogate"]))
+    y = y * o
+    return jnp.einsum("bhsk,hkd->bsd", y, p["wo"])
+
+
+def mlstm_init_state(B: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    # recurrent accumulators are ALWAYS f32: the stabilised recurrence
+    # multiplies by f32 gate factors every step (bf16 carries would both
+    # drift and break scan carry-dtype invariance under bf16 activations)
+    del dtype
+    H, dh = _dims(cfg)
+    return {
+        "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((B, H, dh), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict]:
+    """One step.  x: (B, d) → (B, d)."""
+    B, d = x.shape
+    H, dh = _dims(cfg)
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"]) / jnp.sqrt(dh).astype(x.dtype)
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"])
+    logi = jnp.einsum("bd,dh->bh", x, p["wi"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bd,dh->bh", x, p["wf"]).astype(jnp.float32) + p["bf"])
+
+    m_new = jnp.maximum(logf + state["m"], logi)
+    fe = jnp.exp(logf + state["m"] - m_new)[..., None]
+    ie = jnp.exp(logi - m_new)[..., None]
+    C = state["C"] * fe[..., None] + ie[..., None] * \
+        jnp.einsum("bhv,bhk->bhvk", v, k).astype(jnp.float32)
+    n = state["n"] * fe + ie * k.astype(jnp.float32)
+    qdot = jnp.einsum("bhk,bhk->bh", n, q.astype(jnp.float32))
+    denom = jnp.maximum(jnp.abs(qdot), jnp.exp(-m_new))[..., None]
+    y = jnp.einsum("bhvk,bhk->bhv", C, q.astype(jnp.float32)) / denom
+    o = jax.nn.silu(jnp.einsum("bd,dhk->bhk", x, p["ogate"]))
+    out = jnp.einsum("bhk,hkd->bd", (y * o).astype(x.dtype), p["wo"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H, dh = _dims(cfg)
+    return {
+        "wz": ParamSpec((d, H, dh), ("embed", "heads", None)),
+        "wi": ParamSpec((d, H, dh), ("embed", "heads", None), "small_normal"),
+        "wf": ParamSpec((d, H, dh), ("embed", "heads", None), "small_normal"),
+        "wo_gate": ParamSpec((d, H, dh), ("embed", "heads", None)),
+        # recurrent (block-diagonal per head) connections h_{t-1} → gates
+        "rz": ParamSpec((H, dh, dh), ("heads", None, None), "small_normal"),
+        "ri": ParamSpec((H, dh, dh), ("heads", None, None), "small_normal"),
+        "rf": ParamSpec((H, dh, dh), ("heads", None, None), "small_normal"),
+        "bf": ParamSpec((H, dh), ("heads", None), "ones"),
+        "wo": ParamSpec((H, dh, d), ("heads", None, "embed")),
+    }
+
+
+def slstm_init_state(B: int, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    H, dh = _dims(cfg)
+    zf = jnp.zeros((B, H, dh), jnp.float32)  # f32 accumulators (see mlstm)
+    return {"c": zf, "n": zf, "h": jnp.zeros((B, H, dh), dtype),
+            "m": jnp.full((B, H, dh), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p: Dict, state: Dict, zx, ix, fx, ox):
+    """Inputs are pre-projected (B, H, dh) slices for this timestep."""
+    h_prev = state["h"]
+    z = jnp.tanh(zx + jnp.einsum("bhk,hkj->bhj", h_prev, p["rz"]))
+    logi = (ix + jnp.einsum("bhk,hkj->bhj", h_prev, p["ri"])
+            ).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        (fx + jnp.einsum("bhk,hkj->bhj", h_prev, p["rf"])
+         ).astype(jnp.float32) + p["bf"])
+    o = jax.nn.sigmoid(ox)
+
+    m_new = jnp.maximum(logf + state["m"], logi)
+    fe = jnp.exp(logf + state["m"] - m_new)
+    ie = jnp.exp(logi - m_new)
+    c = state["c"] * fe + ie * z.astype(jnp.float32)
+    n = state["n"] * fe + ie
+    h = o * (c / jnp.maximum(n, 1e-6)).astype(z.dtype)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_train(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sequential scan over time (true recurrence).  x: (B, S, d)."""
+    B, S, d = x.shape
+    zx = jnp.einsum("bsd,dhk->sbhk", x, p["wz"])
+    ix = jnp.einsum("bsd,dhk->sbhk", x, p["wi"])
+    fx = jnp.einsum("bsd,dhk->sbhk", x, p["wf"])
+    ox = jnp.einsum("bsd,dhk->sbhk", x, p["wo_gate"])
+
+    def step(state, inp):
+        state = _slstm_cell(p, state, *inp)
+        return state, state["h"]
+
+    _, hs = jax.lax.scan(step, slstm_init_state(B, cfg, x.dtype),
+                         (zx, ix, fx, ox))
+    return jnp.einsum("sbhk,hkd->bsd", hs, p["wo"])
+
+
+def slstm_decode(p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict]:
+    zx = jnp.einsum("bd,dhk->bhk", x, p["wz"])
+    ix = jnp.einsum("bd,dhk->bhk", x, p["wi"])
+    fx = jnp.einsum("bd,dhk->bhk", x, p["wf"])
+    ox = jnp.einsum("bd,dhk->bhk", x, p["wo_gate"])
+    state = _slstm_cell(p, state, zx, ix, fx, ox)
+    return jnp.einsum("bhk,hkd->bd", state["h"], p["wo"]), state

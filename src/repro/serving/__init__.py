@@ -1,0 +1,4 @@
+from repro.serving.engine import Engine
+from repro.serving.request import Request, Status
+from repro.serving.sampler import SampleParams, sample
+from repro.serving.scheduler import Scheduler

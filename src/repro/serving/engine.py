@@ -1,0 +1,451 @@
+"""Serving engine: continuous batching over the paged KV cache.
+
+The engine is the paper's "system-level integration" (§III): the model's
+prefill/decode steps run against *global* K/V page pools, the scheduler's
+host-side page manager decides admission/preemption, and block tables flow
+device-side each step (the asynchronous-update contract of DESIGN.md §2).
+
+One Engine instance serves one model on one batch of ``max_slots`` logical
+slots. The pool is deliberately *oversubscribable*: ``pool_tokens`` may be
+far less than ``max_slots × max_seq_len`` — that is the paper's entire
+memory win over max-length pre-allocation.
+
+The contiguous baseline (``paged=False``) allocates the paper's comparison
+target instead: per-slot max-length buffers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.paging import HostPageManager
+from repro.models.api import build_model
+from repro.serving.request import Request, Status
+from repro.serving.sampler import SampleParams, sample
+from repro.serving.scheduler import Scheduler
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any = None,
+        *,
+        max_slots: int = 8,
+        max_seq_len: int = 512,
+        pool_tokens: Optional[int] = None,  # None => slots*max_seq_len (no oversub)
+        paged: Optional[bool] = None,
+        impl: str = "ref",
+        rng: Optional[jax.Array] = None,
+        dtype=jnp.float32,
+    ):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.impl = impl
+        self.dtype = dtype
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.paged = cfg.paged_attention if paged is None else paged
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.rng, init_rng = jax.random.split(rng)
+        self.params = (params if params is not None
+                       else self.model.init_params(init_rng, dtype))
+
+        ps = cfg.page_size
+        window = getattr(self.model, "window", 0)
+        if window > 0:
+            self.pages_per_seq = -(-window // ps) + 1
+        else:
+            self.pages_per_seq = -(-max_seq_len // ps)
+        if pool_tokens is None:
+            num_pages = max_slots * self.pages_per_seq
+        else:
+            num_pages = max(-(-pool_tokens // ps), self.pages_per_seq)
+        self.num_pages = num_pages
+
+        self.mgr = HostPageManager(num_pages, ps)
+        self.scheduler = Scheduler(self.mgr, max_slots, max_seq_len)
+        self.state = self._init_state()
+        self._slot_extra: Dict[int, Dict] = {}
+        self.steps = 0
+        self._jit_decode = jax.jit(self._decode_fn, static_argnames=())
+
+    # ------------------------------------------------------------------
+    def _init_state(self) -> Dict:
+        cfg, m = self.cfg, self.model
+        B, ps = self.max_slots, cfg.page_size
+        Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        st: Dict[str, Any] = {"pos": jnp.zeros((B,), jnp.int32)}
+        n_attn = getattr(m, "n_attn_layers", 0)
+        if n_attn:
+            if self.paged:
+                pool = (n_attn, self.num_pages, ps, Hkv, hd)
+                pool_dt = (jnp.int8 if cfg.kv_dtype == "int8"
+                           else self.dtype)
+                st["k_pages"] = jnp.zeros(pool, pool_dt)
+                st["v_pages"] = jnp.zeros(pool, pool_dt)
+                st["tables"] = jnp.full((B, 1, self.pages_per_seq), -1,
+                                        jnp.int32)
+            else:
+                # the paper's baseline: contiguous max-length per-slot buffers
+                buf = (n_attn, B, self.max_seq_len, Hkv, hd)
+                st["k_buf"] = jnp.zeros(buf, self.dtype)
+                st["v_buf"] = jnp.zeros(buf, self.dtype)
+        n_cross = getattr(m, "n_cross_layers", 0)
+        if cfg.family == "encdec":
+            n_cross = cfg.n_layers
+        if n_cross:
+            ctx_len = (cfg.n_audio_frames if cfg.family == "encdec"
+                       else cfg.n_image_tokens)
+            ck = (n_cross, B, ctx_len, Hkv, hd)
+            st["cross_k"] = jnp.zeros(ck, self.dtype)
+            st["cross_v"] = jnp.zeros(ck, self.dtype)
+        # recurrent state slots
+        from repro.models import rglru, ssm
+        rec: Dict[str, Any] = {}
+        codes = cfg.pattern() if cfg.family != "encdec" else ""
+        for code, init in (("R", rglru.rglru_init_state),
+                           ("M", ssm.mlstm_init_state),
+                           ("S", ssm.slstm_init_state)):
+            n = sum(c == code for c in codes)
+            if n:
+                one = init(B, cfg, self.dtype)
+                rec[code] = jax.tree_util.tree_map(
+                    lambda a: jnp.zeros((n,) + a.shape, a.dtype), one)
+        if rec:
+            st["rec"] = rec
+        return st
+
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request, extra: Optional[Dict] = None) -> int:
+        if req.prompt_len + req.max_new_tokens > self.max_seq_len:
+            raise ValueError("request exceeds engine max_seq_len")
+        req.metrics["t_arrive"] = time.perf_counter()
+        if extra is not None:
+            req.metrics["_extra"] = extra  # modality stub embeddings
+        self.scheduler.add(req)
+        return req.rid
+
+    def generate(self, reqs: List[Request],
+                 extras: Optional[List[Optional[Dict]]] = None,
+                 max_steps: int = 100_000) -> List[Request]:
+        """Blocking helper: run until the given requests all finish."""
+        extras = extras or [None] * len(reqs)
+        for r, e in zip(reqs, extras):
+            self.add_request(r, e)
+        for _ in range(max_steps):
+            if all(r.done for r in reqs):
+                break
+            self.step()
+        return reqs
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """One engine iteration: admit → prefill → decode → sample → finish.
+
+        Returns requests that finished this step.
+        """
+        self.steps += 1
+        admitted = self.scheduler.admit()
+        finished: List[Request] = []
+        if admitted:
+            self._prefill(admitted)
+            # the prefill's sampled token may already hit EOS / max_new
+            finished += self._finish_done()
+        if self.scheduler.running:
+            if self.paged:
+                self.scheduler.extend_for_decode()
+            self._decode()
+            finished += self._finish_done()
+        return finished
+
+    # ------------------------------------------------------------------
+    def _tables_array(self) -> jnp.ndarray:
+        t = np.full((self.max_slots, 1, self.pages_per_seq), -1, np.int32)
+        for slot, req in self.scheduler.running.items():
+            row = self.mgr.tables.get(req.rid, [])
+            t[slot, 0, :len(row)] = row[:self.pages_per_seq]
+        return jnp.asarray(t)
+
+    def _prefill(self, admitted: List[Tuple[int, Request]]) -> None:
+        """Prefill newly admitted requests (sub-batch padded to max len)."""
+        cfg = self.cfg
+        slots = [s for s, _ in admitted]
+        reqs = [r for _, r in admitted]
+        toks = [r.prompt + r.output for r in reqs]  # preempted: re-prefill all
+        L = max(len(t) for t in toks)
+        B = len(reqs)
+        batch = np.zeros((B, L), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, t in enumerate(toks):
+            batch[i, :len(t)] = t
+            lens[i] = len(t)
+
+        # sub-batch tables for the admitted slots
+        full_tables = self._tables_array()
+        sub_tables = full_tables[np.asarray(slots), 0]
+
+        st = self.state
+        sub_state: Dict[str, Any] = {"pos": jnp.asarray(lens)}
+        if self.paged and "k_pages" in st:
+            sub_state["k_pages"] = st["k_pages"]
+            sub_state["v_pages"] = st["v_pages"]
+            sub_state["tables"] = sub_tables
+        extra = self._collect_extra(reqs)
+        if not self.paged:
+            self._prefill_contiguous(slots, batch, lens, extra, reqs)
+            return
+
+        logits, new_st = self.model.prefill(
+            self.params, jnp.asarray(batch), sub_state,
+            lens=jnp.asarray(lens), extra=extra, impl=self.impl)
+
+        # merge: global pools were written in place (scatter by tables);
+        # per-slot states (pos, cross, rec) land in the admitted slots.
+        if "k_pages" in new_st:
+            st["k_pages"] = new_st["k_pages"]
+            st["v_pages"] = new_st["v_pages"]
+        idx = jnp.asarray(slots)
+        st["pos"] = st["pos"].at[idx].set(jnp.asarray(lens))
+        for key in ("cross_k", "cross_v"):
+            if key in new_st:
+                st[key] = st[key].at[:, idx].set(new_st[key])
+        if "rec" in new_st:
+            st["rec"] = jax.tree_util.tree_map(
+                lambda g, s: g.at[:, idx].set(s), st["rec"], new_st["rec"])
+
+        self._sample_and_append(reqs, logits, first=True)
+
+    def _prefill_contiguous(self, slots, batch, lens, extra, reqs):
+        """Baseline prefill: run forward, copy K/V into max-length buffers."""
+        # teacher-forced forward to get K/V per layer is implicit: reuse the
+        # paged prefill with identity tables into a temporary exact-size pool,
+        # then gather into the contiguous buffers.
+        cfg = self.cfg
+        B, L = batch.shape
+        ps = cfg.page_size
+        pp = -(-L // ps)
+        n_attn = getattr(self.model, "n_attn_layers", 0)
+        tmp_tables = jnp.arange(B * pp, dtype=jnp.int32).reshape(B, pp)
+        Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        tmp_state: Dict[str, Any] = {
+            "pos": jnp.asarray(lens),
+            "k_pages": jnp.zeros((n_attn, B * pp, ps, Hkv, hd), self.dtype),
+            "v_pages": jnp.zeros((n_attn, B * pp, ps, Hkv, hd), self.dtype),
+            "tables": tmp_tables,
+        }
+        logits, new_st = self.model.prefill(
+            self.params, jnp.asarray(batch), tmp_state,
+            lens=jnp.asarray(lens), extra=extra, impl=self.impl)
+        from repro.core.cache import gather_layer
+        idx = jnp.asarray(slots)
+        st = self.state
+        for li in range(n_attn):
+            k, v = gather_layer(new_st["k_pages"][li], new_st["v_pages"][li],
+                                tmp_tables, L)
+            st["k_buf"] = st["k_buf"].at[li, idx, :L].set(k)
+            st["v_buf"] = st["v_buf"].at[li, idx, :L].set(v)
+        st["pos"] = st["pos"].at[idx].set(jnp.asarray(lens))
+        for key in ("cross_k", "cross_v"):
+            if key in new_st:
+                st[key] = st[key].at[:, idx].set(new_st[key])
+        if "rec" in new_st:
+            st["rec"] = jax.tree_util.tree_map(
+                lambda g, s: g.at[:, idx].set(s), st["rec"], new_st["rec"])
+        self._sample_and_append(reqs, logits, first=True)
+
+    def _collect_extra(self, reqs: List[Request]) -> Optional[Dict]:
+        extras = [r.metrics.get("_extra") for r in reqs]
+        if not any(e for e in extras):
+            return None
+        keys = next(e for e in extras if e).keys()
+        out = {}
+        for k in keys:
+            parts = []
+            for e in extras:
+                if e is None or k not in e:
+                    ref = next(x for x in extras if x and k in x)[k]
+                    parts.append(np.zeros_like(np.asarray(ref)))
+                else:
+                    parts.append(np.asarray(e[k]))
+            out[k] = jnp.asarray(np.stack(parts))
+        return out
+
+    # ------------------------------------------------------------------
+    def _decode_fn(self, params, tokens, state):
+        return self.model.decode_step(params, tokens, state, impl=self.impl)
+
+    def _decode(self) -> None:
+        st = dict(self.state)
+        if self.paged and "k_pages" in st:
+            st["tables"] = self._tables_array()
+        tokens = np.zeros((self.max_slots,), np.int32)
+        live = np.zeros((self.max_slots,), bool)
+        reqs: List[Optional[Request]] = [None] * self.max_slots
+        for slot, req in self.scheduler.running.items():
+            seq = req.prompt + req.output
+            tokens[slot] = seq[-1]
+            live[slot] = True
+            reqs[slot] = req
+
+        if self.paged or "k_buf" not in st:
+            logits, new_st = self._jit_decode(self.params,
+                                              jnp.asarray(tokens), st)
+        else:
+            logits, new_st = self._decode_contiguous(jnp.asarray(tokens), st)
+        # dead slots keep their old pos (decode bumps everyone's)
+        mask = jnp.asarray(live)
+        new_st["pos"] = jnp.where(mask, new_st["pos"], self.state["pos"])
+        if self.paged and "tables" in new_st:
+            new_st.pop("tables")  # host-owned, rebuilt each step
+        self.state.update(new_st)
+        live_reqs = [r for r in reqs if r is not None]
+        live_logits = jnp.asarray(logits)[np.where(live)[0]]
+        self._sample_and_append(live_reqs, live_logits, first=False)
+
+    def _decode_contiguous(self, tokens, st):
+        """Baseline decode path (contiguous buffers, family=dense-ish only)."""
+        from repro.models import attention as mattn, layers
+        cfg = self.cfg
+        m = self.model
+        params = self.params
+        pos = st["pos"]
+        x = layers.embed_tokens(params["embed"], tokens)
+        layer_params = m._per_layer_params(params)
+        codes = cfg.pattern()
+        ai = 0
+        new_st = dict(st)
+        for li, code in enumerate(codes):
+            p = layer_params[li]
+            h = layers.apply_norm(p["ln1"], x)
+            if code in "AW":
+                w = cfg.window if code == "W" else 0
+                o, kb, vb = mattn.attn_decode_contiguous(
+                    p["attn"], h, cfg, st["k_buf"][ai], st["v_buf"][ai],
+                    pos, window=w)
+                new_st["k_buf"] = new_st["k_buf"].at[ai].set(kb)
+                new_st["v_buf"] = new_st["v_buf"].at[ai].set(vb)
+                st = new_st
+                ai += 1
+                x = x + o
+            x, _ = m._apply_ffn(p, x)
+        new_st["pos"] = pos + 1
+        x = layers.apply_norm(params["ln_f"], x)
+        return layers.unembed(params["embed"], x, cfg), new_st
+
+    def _sample_and_append(self, reqs: List[Request], logits: jnp.ndarray,
+                           first: bool) -> None:
+        B = len(reqs)
+        sp = SampleParams(
+            temperature=jnp.asarray([r.temperature for r in reqs], jnp.float32),
+            top_k=jnp.asarray([r.top_k for r in reqs], jnp.int32),
+            top_p=jnp.asarray([r.top_p for r in reqs], jnp.float32),
+        )
+        self.rng, key = jax.random.split(self.rng)
+        toks = np.asarray(sample(key, logits, sp))
+        now = time.perf_counter()
+        for r, t in zip(reqs, toks):
+            r.output.append(int(t))
+            if first and "ttft_s" not in r.metrics:
+                r.metrics["ttft_s"] = now - r.metrics["t_arrive"]
+
+    def _finish_done(self) -> List[Request]:
+        done = []
+        for req in list(self.scheduler.running.values()):
+            hit_eos = (req.eos_id is not None and req.output
+                       and req.output[-1] == req.eos_id)
+            if len(req.output) >= req.max_new_tokens or hit_eos:
+                req.metrics["t_done"] = time.perf_counter()
+                req.metrics["tok_s"] = len(req.output) / max(
+                    req.metrics["t_done"] - req.metrics["t_arrive"], 1e-9)
+                self.scheduler.finish(req)
+                done.append(req)
+        return done
+
+    # ------------------------------------------------------------------
+    # prefix sharing (paper §III contribution 1: fork + copy-on-write)
+    def fork_request(self, src: Request, max_new_tokens: int = 64,
+                     **sampling) -> Request:
+        """Fork a RUNNING request: the child aliases the parent's *full*
+        KV pages (refcount++, zero copies) and gets a fresh copy of the
+        partial tail page — the paper's copy-on-write prefix sharing.
+
+        The child enters the batch immediately (no re-prefill of the
+        shared prefix) and decodes from the parent's current position.
+        """
+        if src.status != Status.RUNNING or not self.paged:
+            raise ValueError("fork requires a RUNNING request on the "
+                             "paged engine")
+        slots = self.scheduler.free_slots()
+        if not slots:
+            raise RuntimeError("no free slot for fork")
+        ps = self.cfg.page_size
+        seq = src.prompt + src.output
+        full_pages = len(seq) // ps
+        need_tail = 1 if len(seq) % ps else 0
+        if need_tail + self.scheduler.headroom > len(self.mgr.free_list):
+            raise RuntimeError("no pages for fork tail")
+
+        child = Request(prompt=list(seq), max_new_tokens=max_new_tokens,
+                        parent=src.rid, **sampling)
+        child.metrics["t_arrive"] = time.perf_counter()
+        # host manager: alias full pages (refcount++), reserve fresh tail
+        self.mgr.fork(src.rid, child.rid)
+        # device: copy the parent's partial tail page into the child's
+        if need_tail:
+            src_tail = self.mgr.tables[src.rid][full_pages]
+            dst_tail = self.mgr.tables[child.rid][full_pages]
+            st = self.state
+            st["k_pages"] = st["k_pages"].at[:, dst_tail].set(
+                st["k_pages"][:, src_tail])
+            st["v_pages"] = st["v_pages"].at[:, dst_tail].set(
+                st["v_pages"][:, src_tail])
+        # enter the running batch at the parent's position
+        slot = slots[0]
+        child.status = Status.RUNNING
+        child.slot = slot
+        self.scheduler.running[slot] = child
+        src_pos = int(np.asarray(self.state["pos"])[src.slot])
+        self.state["pos"] = self.state["pos"].at[slot].set(src_pos)
+        for key in ("cross_k", "cross_v"):
+            if key in self.state:
+                self.state[key] = self.state[key].at[:, slot].set(
+                    self.state[key][:, src.slot])
+        if "rec" in self.state:
+            self.state["rec"] = jax.tree_util.tree_map(
+                lambda a: a.at[:, slot].set(a[:, src.slot]),
+                self.state["rec"])
+        child.metrics["ttft_s"] = 0.0  # prefix shared: no prefill
+        return child
+
+    # ------------------------------------------------------------------
+    # memory accounting (paper Fig. 1/2 + the <5% overhead objective)
+    def memory_report(self) -> Dict[str, float]:
+        cfg = self.cfg
+        Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        n_attn = getattr(self.model, "n_attn_layers", 0)
+        item = jnp.dtype(self.dtype).itemsize
+        if self.paged:
+            cache_bytes = (2 * n_attn * self.num_pages * cfg.page_size
+                           * Hkv * hd * item)
+            reserved = self.mgr.bytes_reserved(Hkv, hd, n_attn, item)
+        else:
+            cache_bytes = (2 * n_attn * self.max_slots * self.max_seq_len
+                           * Hkv * hd * item)
+            reserved = cache_bytes
+        live_tokens = sum(r.total_len
+                          for r in self.scheduler.running.values())
+        minimum = live_tokens * 2 * n_attn * Hkv * hd * item
+        return {
+            "pool_bytes": float(cache_bytes),
+            "reserved_bytes": float(reserved),
+            "theoretical_min_bytes": float(minimum),
+            "overhead_frac": (reserved / minimum - 1.0) if minimum else 0.0,
+            "used_pages": float(self.mgr.used_pages) if self.paged else -1.0,
+        }

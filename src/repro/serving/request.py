@@ -1,0 +1,46 @@
+"""Serving request objects + lifecycle states."""
+
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_ids = itertools.count()
+
+
+class Status(enum.Enum):
+    WAITING = "waiting"        # queued, no pages reserved
+    RUNNING = "running"        # in the decode batch
+    PREEMPTED = "preempted"    # pages reclaimed; will re-prefill
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    eos_id: Optional[int] = None
+    # set by the engine
+    rid: int = field(default_factory=lambda: next(_ids))
+    status: Status = Status.WAITING
+    slot: int = -1                     # batch slot while RUNNING
+    output: List[int] = field(default_factory=list)
+    parent: Optional[int] = None       # prefix-shared parent request id
+    metrics: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + len(self.output)
+
+    @property
+    def done(self) -> bool:
+        return self.status == Status.FINISHED

@@ -1,0 +1,46 @@
+"""Token sampling: greedy / temperature / top-k / top-p, batched + jit-able."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SampleParams(NamedTuple):
+    temperature: jax.Array  # (B,) f32; 0 => greedy
+    top_k: jax.Array  # (B,) int32; 0 => off
+    top_p: jax.Array  # (B,) f32; 1.0 => off
+
+
+def sample(rng: jax.Array, logits: jax.Array, params: SampleParams
+           ) -> jax.Array:
+    """logits: (B, V) -> (B,) int32 tokens."""
+    B, V = logits.shape
+    logits = logits.astype(jnp.float32)
+
+    # top-k filter
+    def topk_mask(lg, k):
+        kth = jnp.sort(lg)[::-1][jnp.clip(k - 1, 0, V - 1)]
+        return jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
+
+    lg = jax.vmap(topk_mask)(logits, params.top_k)
+
+    # top-p (nucleus) filter
+    def topp_mask(lg, p):
+        srt = jnp.sort(lg)[::-1]
+        probs = jax.nn.softmax(srt)
+        csum = jnp.cumsum(probs)
+        # keep the smallest prefix with mass >= p (always keep the argmax)
+        keep_sorted = jnp.concatenate([jnp.array([True]), csum[:-1] < p])
+        cutoff = jnp.min(jnp.where(keep_sorted, srt, jnp.inf))
+        return jnp.where((p < 1.0) & (lg < cutoff), -jnp.inf, lg)
+
+    lg = jax.vmap(topp_mask)(lg, params.top_p)
+
+    temp = jnp.maximum(params.temperature, 1e-6)[:, None]
+    keys = jax.random.split(rng, B)
+    sampled = jax.vmap(lambda k, l: jax.random.categorical(k, l))(keys, lg / temp)
+    greedy = jnp.argmax(logits, axis=-1)
+    return jnp.where(params.temperature <= 0.0, greedy, sampled).astype(jnp.int32)

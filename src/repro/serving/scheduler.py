@@ -1,0 +1,110 @@
+"""Continuous-batching scheduler with paged admission control + preemption.
+
+The scheduler owns the *host* side of the paper's page manager: a
+``HostPageManager`` mirror whose O(1) integer ops decide, off the device
+critical path, which requests join the batch (RESERVE), which finish (FREE),
+and which get preempted when the pool runs dry mid-decode (the paper's
+"reclaim space instantly" requirement, §I-A1).
+
+Policy (vLLM-style):
+  * FIFO admission; a request is admitted when a batch slot is free AND the
+    pool holds its prompt pages + ``headroom`` decode pages.
+  * every decode step may need one new page per running sequence; if the
+    pool cannot serve a needed page, the *youngest* running request is
+    preempted: its pages are freed instantly and it re-queues for a full
+    re-prefill (recompute > swap, as in vLLM's default).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.paging import HostPageManager
+from repro.serving.request import Request, Status
+
+
+class Scheduler:
+    def __init__(self, manager: HostPageManager, max_slots: int,
+                 max_seq_len: int, headroom_pages: int = 1):
+        self.mgr = manager
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.headroom = headroom_pages
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}  # slot -> request
+        self.preempted: int = 0
+
+    # ------------------------------------------------------------------
+    def add(self, req: Request) -> None:
+        req.status = Status.WAITING
+        self.waiting.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.max_slots) if s not in self.running]
+
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.mgr.page_size)
+
+    # ------------------------------------------------------------------
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Admit waiting requests into free slots while pages allow.
+
+        Returns [(slot, request)] newly admitted (they need a prefill pass).
+        """
+        admitted = []
+        slots = self.free_slots()
+        while self.waiting and slots:
+            req = self.waiting[0]
+            need = self._pages_for(req.total_len) + self.headroom
+            if need > len(self.mgr.free_list):
+                break  # head-of-line blocking keeps FIFO fairness
+            self.waiting.pop(0)
+            slot = slots.pop(0)
+            ok = self.mgr.reserve(req.rid, req.total_len)
+            assert ok, "capacity was checked above"
+            req.status = Status.RUNNING
+            req.slot = slot
+            self.running[slot] = req
+            admitted.append((slot, req))
+        return admitted
+
+    def extend_for_decode(self) -> List[Request]:
+        """Grow every running sequence by one token; preempt on exhaustion.
+
+        Returns the requests preempted this step (their slots are now free).
+        """
+        victims: List[Request] = []
+        # youngest first when picking victims
+        order = sorted(self.running.values(), key=lambda r: r.rid)
+        for req in order:
+            while not self.mgr.extend(req.rid, 1):
+                cand = [r for r in order
+                        if r.status == Status.RUNNING and r is not req]
+                if not cand:
+                    raise RuntimeError(
+                        "page pool too small for a single sequence")
+                victim = max(cand, key=lambda r: r.rid)
+                self._preempt(victim)
+                victims.append(victim)
+                order = [r for r in order if r is not victim]
+        return victims
+
+    def _preempt(self, req: Request) -> None:
+        self.mgr.free(req.rid)
+        del self.running[req.slot]
+        req.slot = -1
+        req.status = Status.PREEMPTED
+        # preempted requests restart with prompt+generated so far as prompt
+        self.waiting.insert(0, req)
+        self.preempted += 1
+
+    def finish(self, req: Request) -> None:
+        self.mgr.free(req.rid)
+        if req.slot in self.running and self.running[req.slot] is req:
+            del self.running[req.slot]
+        req.slot = -1
+        req.status = Status.FINISHED
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

@@ -1,0 +1,4 @@
+from repro.training.optimizer import (adamw_init, adamw_update,
+                                      cosine_schedule, clip_by_global_norm)
+from repro.training.state import TrainState
+from repro.training.loop import make_train_step, train_loop

@@ -1,0 +1,77 @@
+"""Checkpointing: flat-key .npz save/restore of any pytree.
+
+Keys are slash-joined tree paths; restore reconstructs into a target tree
+(so shardings/structure come from the model, not the file). No pickle —
+portable and safe.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+
+    def name(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out[name(path)] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(path: str, target: Any) -> Any:
+    """Load into the structure of ``target`` (arrays or ShapeDtypeStructs)."""
+    with np.load(path) as data:
+        flat = dict(data)
+    names = list(_flatten_names(target))
+    leaves, treedef = jax.tree_util.tree_flatten(target)
+    assert len(names) == len(leaves)
+    out = []
+    for n, ref in zip(names, leaves):
+        if n not in flat:
+            raise KeyError(f"checkpoint missing {n!r}")
+        a = flat[n]
+        if tuple(a.shape) != tuple(ref.shape):
+            raise ValueError(f"{n}: shape {a.shape} != expected {ref.shape}")
+        out.append(jnp.asarray(a, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _flatten_names(tree):
+    def name(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        yield name(path)

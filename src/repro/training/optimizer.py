@@ -1,0 +1,96 @@
+"""AdamW + cosine schedule + global-norm clipping, in pure JAX.
+
+No optax dependency: the optimizer state is a plain pytree (mu, nu) matching
+the parameter tree, so it shards with the same logical-axis rules as the
+parameters (each moment inherits its parameter's NamedSharding) and
+checkpointing is uniform.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any  # first moment, same tree as params
+    nu: Any  # second moment
+    count: jax.Array  # () int32 step counter
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return AdamWState(
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype),
+                                  grads), gnorm
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``min_frac * base_lr``."""
+
+    def lr(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,  # float or callable(step) -> lr
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Any, AdamWState]:
+    """One AdamW step. Returns (new_params, new_state)."""
+    count = state.count + 1
+    lr_t = lr(count) if callable(lr) else jnp.float32(lr)
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        # moments are stored in their tree's dtype (f32 by default; the
+        # multi-pod giants use bf16 moments — DESIGN.md §7) so the train
+        # state pytree round-trips with stable dtypes and donation aliases.
+        return ((p - lr_t * step.astype(p.dtype)).astype(p.dtype),
+                m32.astype(m.dtype), v32.astype(v.dtype))
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(mu=new_m, nu=new_v, count=count)

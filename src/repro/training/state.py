@@ -1,0 +1,21 @@
+"""Train state: params + optimizer state + step, as one pytree."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamWState, adamw_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array  # () int32
+
+    @classmethod
+    def create(cls, params) -> "TrainState":
+        return cls(params=params, opt=adamw_init(params),
+                   step=jnp.zeros((), jnp.int32))

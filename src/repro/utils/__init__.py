@@ -1,0 +1,7 @@
+from repro.utils.tree import (
+    count_params,
+    param_bytes,
+    tree_map_with_path_names,
+)
+
+__all__ = ["count_params", "param_bytes", "tree_map_with_path_names"]

@@ -1,0 +1,33 @@
+"""Small pytree utilities used across the framework."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def count_params(tree) -> int:
+    """Total number of scalar parameters in a pytree of arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) for l in leaves if hasattr(l, "shape")))
+
+
+def param_bytes(tree) -> int:
+    """Total bytes of a pytree of (Shape)(Dtype)Structs or arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for l in leaves:
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_map_with_path_names(fn, tree):
+    """tree_map where fn receives ("a/b/c", leaf)."""
+
+    def _fn(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        return fn(name, leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
