@@ -1,0 +1,32 @@
+# Local verification targets — run `make verify` before pushing.
+#
+#   test        the tier-1 gate, verbatim (pytest -x -q) — halts on the
+#               known pre-existing failures below, like the harness does
+#   test-clean  tier-1 minus the failures that ship with the seed, so new
+#               regressions are actually reachable locally
+#   bench-fast  smoke run of the decode benches, incl. the blocked/split-K
+#               kernel sweep — catches perf-knob regressions (grid-step
+#               blowups, kernel/oracle divergence) that unit tests miss
+#   verify      test-clean + bench-fast
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+# Failing since the seed commit (see CHANGES.md) — not gated on here:
+KNOWN_FAIL = \
+  --deselect tests/test_engine.py::test_fork_prefix_sharing_is_exact_and_copy_on_write \
+  --deselect tests/test_distributed_multi.py::test_ring_attention_matches_dense \
+  --deselect tests/test_distributed_multi.py::test_kvp_flash_decoding_matches_local
+
+.PHONY: test test-clean bench-fast verify
+
+test:
+	$(PY) -m pytest -x -q
+
+test-clean:
+	$(PY) -m pytest -x -q $(KNOWN_FAIL)
+
+bench-fast:
+	$(PY) -m benchmarks.run --fast --only fig4_decode,tbl_decode_blocks
+
+verify: test-clean bench-fast

@@ -4,6 +4,7 @@
   fig4_decode     decode ms/token, paged vs contiguous kernel   (Fig. 4)
   fig12_memory    KV memory accounting, paged vs baseline       (Figs. 1-2)
   tbl_allocator   O(1) RESERVE/FREE microbenchmark              (contrib. 1)
+  tbl_decode_blocks  pages_per_block × num_splits kernel sweep  (kernel v2)
   tbl_perplexity  numerical equivalence of eval loss            (§IV-B3)
   mixed_batch     throughput under a fixed memory budget        (§IV b)
   roofline        dry-run roofline aggregation                  (§Roofline)
@@ -26,12 +27,13 @@ def main() -> None:
 
     from benchmarks import (fig3_latency, fig4_decode, fig12_memory,
                             mixed_batch, roofline, tbl_allocator,
-                            tbl_pagesize, tbl_perplexity)
+                            tbl_decode_blocks, tbl_pagesize, tbl_perplexity)
     benches = {
         "fig3_latency": fig3_latency.run,
         "fig4_decode": fig4_decode.run,
         "fig12_memory": fig12_memory.run,
         "tbl_allocator": tbl_allocator.run,
+        "tbl_decode_blocks": tbl_decode_blocks.run,
         "tbl_pagesize": tbl_pagesize.run,
         "tbl_perplexity": tbl_perplexity.run,
         "mixed_batch": mixed_batch.run,

@@ -1,0 +1,78 @@
+"""Decode-kernel tuning sweep: pages_per_block × num_splits.
+
+For each knob combination this reports the grid-step count per
+(batch, kv_head) pair, interpret-mode wall time, and max abs error vs the
+jnp oracle — so a perf win is never a silent correctness loss.
+
+``grid_steps`` is the hardware-relevant metric: on a real TPU each grid
+step pays fixed pipeline overhead and a sliver-shaped matmul, so fewer,
+fatter steps (ppb·page_size = 128 KV tokens) feed the MXU at full width,
+and split-K adds parallel grid slots for long single sequences.
+``us_per_call`` is CPU interpret mode, where python-level per-*page* work
+dominates instead — it validates semantics and tracks relative knob cost,
+not TPU speed.
+
+The ``auto`` row is `choose_decode_params`, the heuristic the serving
+engine uses when the knobs are left unset.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Table, timeit
+from repro.core.attention import choose_decode_params, decode_attention
+from repro.kernels.paged_attention.paged_attention import decode_grid_steps
+
+PAGE_SIZE = 16
+SEQ_LEN = 1024
+B = 2
+HKV, G, D = 2, 4, 64  # GQA 4:1
+
+
+def _case(seq_len: int):
+    mp = -(-seq_len // PAGE_SIZE)
+    H = HKV * G
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (B * mp, PAGE_SIZE, HKV, D))
+    vp = jax.random.normal(ks[2], (B * mp, PAGE_SIZE, HKV, D))
+    bt = jnp.arange(B * mp, dtype=jnp.int32).reshape(B, mp)
+    lens = jnp.asarray([seq_len, seq_len - 3 * PAGE_SIZE - 5], jnp.int32)
+    return q, kp, vp, bt, lens, mp
+
+
+def run(fast: bool = False):
+    seq_len = 256 if fast else SEQ_LEN
+    q, kp, vp, bt, lens, mp = _case(seq_len)
+    ref = decode_attention(q, kp, vp, bt, lens, impl="ref")
+
+    sweep = ([(1, 1), (8, 1), (8, 4)] if fast else
+             [(1, 1), (2, 1), (4, 1), (8, 1), (8, 2), (8, 4), (8, 8),
+              (4, 4), (16, 4)])
+    # label rows with the *effective* (clamped) knobs, deduped — a short
+    # sequence clamps num_splits down and a mislabeled row would read as
+    # "split-K costs more for nothing"
+    auto = choose_decode_params(mp, PAGE_SIZE, D)
+    rows = [("auto",) + auto]
+    seen = {auto}
+    for req in sweep:
+        eff = choose_decode_params(mp, PAGE_SIZE, D, *req)
+        if eff not in seen:
+            seen.add(eff)
+            rows.append(("fixed",) + eff)
+
+    t = Table(f"tbl_decode_blocks_s{seq_len}",
+              ["ppb_x_splits", "us_per_call", "grid_steps", "max_abs_err"])
+    for tag, ppb, ns in rows:
+        fn = jax.jit(lambda q, kp, vp, bt, l, ppb=ppb, ns=ns: decode_attention(
+            q, kp, vp, bt, l, impl="pallas", interpret=True,
+            pages_per_block=ppb, num_splits=ns))
+        us = timeit(fn, q, kp, vp, bt, lens, warmup=1, iters=2) * 1e6
+        err = float(jnp.max(jnp.abs(fn(q, kp, vp, bt, lens) - ref)))
+        steps = decode_grid_steps(mp, pages_per_block=ppb, num_splits=ns)
+        label = f"{ppb}x{ns}" + ("_auto" if tag == "auto" else "")
+        t.add(label, round(us, 1), steps, f"{err:.2e}")
+    t.show()
+    return t

@@ -29,15 +29,24 @@ def main():
     ap.add_argument("--arch", default="llama2-7b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--impl", default="ref", choices=["ref", "pallas"],
+                    help="decode attention op: jnp oracle or Pallas kernel")
+    ap.add_argument("--pages-per-block", type=int, default=None,
+                    help="Pallas kernel KV-block width (default: auto)")
+    ap.add_argument("--num-splits", type=int, default=None,
+                    help="Pallas kernel split-K factor (default: auto)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     slots, max_seq, pool = 8, 128, 640
     rng = np.random.default_rng(0)
 
-    print(f"== paged engine: {slots} slots, pool {pool} tokens ==")
+    print(f"== paged engine: {slots} slots, pool {pool} tokens, "
+          f"impl={args.impl} ==")
     eng = Engine(cfg, max_slots=slots, max_seq_len=max_seq,
-                 pool_tokens=pool)
+                 pool_tokens=pool, impl=args.impl,
+                 pages_per_block=args.pages_per_block,
+                 num_splits=args.num_splits)
     reqs = wave(rng, args.requests, max_seq - args.max_new, args.max_new)
     t0 = time.perf_counter()
     eng.generate(reqs, max_steps=3000)

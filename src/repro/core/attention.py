@@ -31,6 +31,9 @@ from repro.kernels.flex_attention.ops import flex_attention
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.kernels.paged_attention.ref import ring_slot_positions
 
+# re-export: serving/bench code sizes decode grids through this module
+from repro.kernels.paged_attention.ops import choose_decode_params  # noqa: F401
+
 
 def prefill_attention(
     q: jax.Array,  # (B, S, H, D)
@@ -42,7 +45,7 @@ def prefill_attention(
     lens: Optional[jax.Array] = None,
     causal: bool = True,
     impl: str = "jnp",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Full-sequence attention for training / prefill.  Returns (B, S, H, D)."""
     B, S, H, D = q.shape
@@ -188,8 +191,10 @@ def decode_attention(
     kv_psum_axes: Tuple[str, ...] = (),
     page_stride: int = 1,
     page_offset=0,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     kv_scale: float = 0.0,
+    pages_per_block: Optional[int] = None,
+    num_splits: Optional[int] = None,
 ) -> jax.Array:
     """Paged decode attention; distributed combine over ``kv_psum_axes``.
 
@@ -199,11 +204,18 @@ def decode_attention(
     with the numerically-stable two-pass combine (flash-decoding on a mesh).
     ``page_stride``/``page_offset`` describe round-robin page striping:
     local table slot j holds *logical* page j·stride + offset.
+
+    ``pages_per_block`` / ``num_splits`` are the single-device Pallas
+    kernel's KV-block width and split-K factor (``None`` → auto-tuned,
+    see `choose_decode_params`); the kvp path's split-K happens across the
+    mesh instead, so they only apply to the local kernel.
     """
     if not kv_psum_axes:
         return paged_attention(q, k_pages, v_pages, block_tables, lens,
                                window=window, softcap=softcap, impl=impl,
-                               interpret=interpret, kv_scale=kv_scale)
+                               interpret=interpret, kv_scale=kv_scale,
+                               pages_per_block=pages_per_block,
+                               num_splits=num_splits)
 
     # --- local partials ---------------------------------------------------
     m_l, l_l, o_l = _partial_decode(q, k_pages, v_pages, block_tables, lens,

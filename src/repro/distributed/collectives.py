@@ -71,8 +71,10 @@ def decode_attention_sharded(
     scheme: str = "local",  # local | tp | dp | kvp
     batch_axes: Tuple[str, ...] = (),
     impl: str = "ref",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     kv_scale: float = 0.0,  # >0: int8 pools with this dequant step
+    pages_per_block: Optional[int] = None,  # Pallas KV-block width (None=auto)
+    num_splits: Optional[int] = None,  # Pallas split-K factor (None=auto)
 ) -> jax.Array:
     """Returns (B, Hkv, G, hd)."""
     mesh = current_mesh()
@@ -85,7 +87,8 @@ def decode_attention_sharded(
         o = core_attn.decode_attention(
             q, k_pages, v_pages, t, lens, window=window, softcap=softcap,
             impl=impl, kv_psum_axes=kv_psum_axes, page_stride=page_stride,
-            page_offset=page_offset, interpret=interpret, kv_scale=kv_scale)
+            page_offset=page_offset, interpret=interpret, kv_scale=kv_scale,
+            pages_per_block=pages_per_block, num_splits=num_splits)
         return o.reshape(b, nk, g, d)
 
     if mesh is None or scheme == "local":

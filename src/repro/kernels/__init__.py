@@ -5,3 +5,22 @@ flex_attention/  — flash-style prefill kernel with FlexAttention mask/score
                    mods and BlockMask-driven tile skipping
 Each has ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle).
 """
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+
+@functools.lru_cache(maxsize=1)
+def _default_interpret() -> bool:
+    # Resolved once per process: Pallas kernels compile on real TPUs and
+    # fall back to interpret mode everywhere else (CPU CI, GPU hosts).
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` → auto (interpret iff not running on TPU); bools pass through."""
+    return _default_interpret() if interpret is None else bool(interpret)

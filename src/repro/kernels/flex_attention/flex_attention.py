@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import flex
+from repro.kernels import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -130,7 +131,7 @@ def flex_attention_kernel(
     score_mod=None,
     q_len: int = 0,  # true (pre-padding) lengths; 0 = no padding
     kv_len: int = 0,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     B, H, Q, D = q.shape
     Hkv, K = k.shape[1], k.shape[2]
@@ -188,6 +189,6 @@ def flex_attention_kernel(
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, H, Q, D), q.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(block_mask.kv_num_blocks, block_mask.kv_indices,
       block_mask.is_full.astype(jnp.int32), *mask_aux, *score_aux, q, k, v)

@@ -32,7 +32,7 @@ def flex_attention(
     impl: str = "pallas",
     q_block: int = 128,
     kv_block: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None → auto (interpret iff not TPU)
 ) -> jax.Array:
     B, H, Q, D = q.shape
     K = k.shape[2]

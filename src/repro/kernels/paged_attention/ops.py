@@ -1,28 +1,81 @@
 """Public op: paged decode attention (kernel or oracle, GQA-aware).
 
 `paged_attention(...)` is the drop-in attention-over-pages op the rest of
-the framework calls.  ``impl="pallas"`` runs the Pallas kernel
-(interpret-mode on CPU, compiled on real TPU); ``impl="ref"`` runs the
-pure-jnp oracle (also the dry-run lowering path — see DESIGN.md §7).
+the framework calls.  ``impl="pallas"`` runs the blocked/split-K Pallas
+kernel (interpret-mode off-TPU, compiled on real TPU — ``interpret=None``
+auto-resolves); ``impl="ref"`` runs the pure-jnp oracle (also the dry-run
+lowering path — see DESIGN.md §7).
+
+``pages_per_block`` / ``num_splits`` control the kernel's KV-block width
+and flash-decoding split-K factor; ``None`` invokes
+`choose_decode_params`, the auto-tuning heuristic keyed on
+``(max_pages · page_size, page_size, head_dim)``.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.paged_attention.paged_attention import paged_attention_kernel
+from repro.kernels import resolve_interpret
+from repro.kernels.paged_attention.paged_attention import (
+    decode_partition, paged_attention_kernel)
 from repro.kernels.paged_attention.ref import paged_attention_ref
+
+# KV tokens per grid step the MXU digests at full width.
+_TARGET_BLOCK_TOKENS = 128
+# Per-step K+V VMEM budget (bytes, f32-equivalent) — bounds pages_per_block
+# for large head_dim so the double-buffered working set stays comfortable.
+_KV_VMEM_BUDGET = 1 << 20
+# Flash-decoding split sizing: keep >= this many blocks per split so the
+# combine overhead stays negligible, and never exceed _MAX_SPLITS slots.
+_MIN_BLOCKS_PER_SPLIT = 4
+_MAX_SPLITS = 8
+
+
+def choose_decode_params(
+    max_pages: int,
+    page_size: int,
+    head_dim: int,
+    pages_per_block: Optional[int] = None,
+    num_splits: Optional[int] = None,
+) -> Tuple[int, int]:
+    """Auto-tune (pages_per_block, num_splits) for the decode kernel.
+
+    Heuristic, keyed on the sequence capacity ``max_pages · page_size``,
+    the page size, and the head dim:
+
+      * block width targets ``_TARGET_BLOCK_TOKENS`` KV tokens per grid
+        step (MXU-aligned for page sizes ≤ 128), capped so the K+V block
+        working set stays under ``_KV_VMEM_BUDGET`` bytes;
+      * split-K grows with the block count (longer sequences → more
+        parallel grid slots) but keeps ≥ ``_MIN_BLOCKS_PER_SPLIT`` blocks
+        per split and ≤ ``_MAX_SPLITS`` splits — short sequences decode
+        in a single split with zero combine overhead.
+
+    Explicit values pass through (clamped to legal ranges).
+    """
+    if pages_per_block is None:
+        target = max(1, _TARGET_BLOCK_TOKENS // max(1, int(page_size)))
+        vmem_cap = max(1, _KV_VMEM_BUDGET // (2 * 4 * int(page_size)
+                                              * max(1, int(head_dim))))
+        pages_per_block = min(target, vmem_cap)
+    ppb, n_blocks, _, _ = decode_partition(max_pages, pages_per_block)
+    if num_splits is None:
+        num_splits = min(max(1, n_blocks // _MIN_BLOCKS_PER_SPLIT),
+                         _MAX_SPLITS)
+    _, _, ns, _ = decode_partition(max_pages, ppb, num_splits)
+    return ppb, ns
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("scale", "window", "softcap", "impl", "interpret",
-                     "kv_scale"),
+                     "kv_scale", "pages_per_block", "num_splits"),
 )
 def paged_attention(
     q: jax.Array,  # (B, n_heads, head_dim)
@@ -35,12 +88,16 @@ def paged_attention(
     window: int = 0,
     softcap: float = 0.0,
     impl: str = "pallas",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     kv_scale: float = 0.0,  # >0: int8 pools, dequantized on the fly
+    pages_per_block: Optional[int] = None,  # None → auto-tuned
+    num_splits: Optional[int] = None,  # None → auto-tuned
 ) -> jax.Array:
     """Attention of one query token per sequence over its paged KV cache."""
     B, n_heads, head_dim = q.shape
     n_kv = k_pages.shape[2]
+    page_size = k_pages.shape[1]
+    max_pages = block_tables.shape[1]
     scale = float(scale if scale is not None else 1.0 / np.sqrt(head_dim))
 
     if impl == "ref":
@@ -48,10 +105,13 @@ def paged_attention(
             q, k_pages, v_pages, block_tables, lens,
             scale=scale, window=window, softcap=softcap, kv_scale=kv_scale)
 
+    ppb, ns = choose_decode_params(max_pages, page_size, head_dim,
+                                   pages_per_block, num_splits)
     G = n_heads // n_kv
     qg = q.reshape(B, n_kv, G, head_dim)
     out = paged_attention_kernel(
         qg, k_pages, v_pages, block_tables, lens,
-        scale=scale, window=window, softcap=softcap, interpret=interpret,
-        kv_scale=kv_scale)
+        scale=scale, window=window, softcap=softcap,
+        interpret=resolve_interpret(interpret), kv_scale=kv_scale,
+        pages_per_block=ppb, num_splits=ns)
     return out.reshape(B, n_heads, head_dim)

@@ -1,33 +1,79 @@
-"""Pallas TPU kernel: fused paged decode attention.
+"""Pallas TPU kernel: fused paged decode attention (blocked + split-K).
 
 TPU adaptation of the paper's FlexAttention-fused PagedAttention (§III-B).
-On GPU the fused kernel gathers scattered KV through `mask_mod` indexing;
-on TPU random gathers inside a kernel are slow, so instead the *grid* walks
-pages and the block table is a **scalar-prefetch operand**: the page→HBM
+On GPU the fused kernel gathers scattered KV through ``mask_mod`` indexing;
+on TPU random gathers inside a kernel are slow, so the *grid* walks the page
+list and the block table is a **scalar-prefetch operand**: the page→HBM
 translation happens in the BlockSpec ``index_map``, so the Pallas pipeline's
 DMA engine streams exactly the live pages HBM→VMEM, double-buffered, with no
-gather materialisation (DESIGN.md §2, A1).  Because physical pages are
-scattered, each grid step fetches exactly one page (the pipeline still
-overlaps the next page's DMA with this page's compute).
+gather materialisation (DESIGN.md §2, A1).
 
-Grid: (batch, kv_heads, max_pages)  — pages innermost so the online-softmax
-accumulators for one (b, h) persist in VMEM scratch across page steps.
+Design (v2: multi-page KV blocks + flash-decoding split-K)
+==========================================================
 
-Block shapes (VMEM working set, MXU-aligned when head_dim is 128):
-  q    : (1, 1, q_per_kv, head_dim)   — the decode token's q-head group
-  k/v  : (1, page_size, 1, head_dim)  — one physical page
-  out  : (1, 1, q_per_kv, head_dim)
+Grid layout
+-----------
+::
 
-Pages whose first token is past the sequence length are skipped with
-``pl.when`` (no FLOPs; the DMA for their duplicate-clamped page still lands
-but is O(page) — the wrapper clamps dead table entries to page 0).
-The sliding-window variant masks by ring-slot position (bounded cache).
+    grid = (batch, kv_heads, num_splits, blocks_per_split)
+
+Each grid step processes one **KV block** of ``pages_per_block`` physical
+pages (= ``pages_per_block * page_size`` KV tokens, MXU-aligned when the
+product is a multiple of 128).  The split-K axis partitions the page list
+into ``num_splits`` contiguous ranges of ``blocks_per_split`` blocks each;
+every ``(b, h, s)`` slot runs an independent online softmax over its range
+and emits an un-normalised partial ``(m, l, acc)``.  A cheap jnp combine
+(`combine_partials`) merges the partials with the numerically-stable
+flash-decoding correction — the same math `ref.combine_partials_ref`
+documents::
+
+    m* = max_s m_s          l* = Σ_s l_s · exp(m_s − m*)
+    o  = Σ_s acc_s · exp(m_s − m*) / max(l*, ε)
+
+Scattered pages per block
+-------------------------
+A BlockSpec fetches one contiguous block per operand, so a multi-page block
+of *scattered* pages cannot come from a single index_map.  Instead the
+k/v pools are passed ``pages_per_block`` times, each copy with its own
+index_map reading column ``j`` of the **2-D table slice**
+``tables3d[b, s·blocks_per_split + blk, j]``: the pipeline still streams
+each scattered page HBM→VMEM as its own (double-buffered) DMA, but the
+compute concatenates the ``pages_per_block`` VMEM tiles into one
+``(pages_per_block · page_size, head_dim)`` tile so the two matmuls
+(``q·Kᵀ`` and ``p·V``) hit the MXU at full width.
+
+Dead entries / ragged lengths
+-----------------------------
+Table ranks are clamped to the last *live* page of each sequence before
+the kernel launches (``min(slot, ceil(len/page) − 1)``): a wholly dead
+block therefore indexes the same pages as the previous step, and the
+Pallas pipeline skips the re-fetch (a DMA is issued only when an
+operand's block index changes between consecutive steps) — pages past
+``lens[b]`` are never streamed.  Compute for dead blocks is skipped with
+``pl.when``; per-token masking inside a partially-live block uses the
+logical position of each page slot.  A fully-empty split emits
+``(NEG_INF, 0, 0)`` and drops out of the combine exactly.
+
+VMEM working set per grid step (f32 words unless noted)
+-------------------------------------------------------
+::
+
+    q        G · D                    (storage dtype)
+    k, v     2 · pages_per_block · page_size · D   (storage dtype)
+    scores   G · pages_per_block · page_size
+    scratch  G · (2 + D)             (m, l, acc — persist across blocks)
+    partials G · (2 + D) per (b, h, s) output block
+
+The sliding-window variant masks by ring-slot position (bounded ring
+cache, see ``ref.ring_slot_positions``); softcap and int8 ``kv_scale``
+dequantisation are applied per block inside the kernel, in both the
+blocked and split-K paths.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,77 +81,120 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 NEG_INF = -1e30
 
 
+def decode_partition(max_pages: int, pages_per_block: int = 1,
+                     num_splits: int = 1) -> Tuple[int, int, int, int]:
+    """Clamp knobs and derive the kernel's split/block partition.
+
+    Returns ``(pages_per_block, n_blocks, num_splits, blocks_per_split)``.
+    Single source of the partition law — the kernel grid, the auto-tuner
+    (`ops.choose_decode_params`), the grid-step accounting
+    (`decode_grid_steps`), and the split-K oracle
+    (`ref.paged_attention_partials_ref`) must all agree bit-for-bit on
+    which pages land in which split.
+    """
+    max_pages = max(1, int(max_pages))
+    ppb = max(1, min(int(pages_per_block), max_pages))
+    n_blocks = -(-max_pages // ppb)
+    ns = max(1, min(int(num_splits), n_blocks))
+    bps = -(-n_blocks // ns)  # last split may cover padding blocks
+    return ppb, n_blocks, ns, bps
+
+
+def combine_partials(m: jax.Array, l: jax.Array, acc: jax.Array,
+                     dtype=jnp.float32) -> jax.Array:
+    """Merge split-K partials over the split axis (flash-decoding).
+
+    m, l: (B, Hkv, S, G); acc: (B, Hkv, S, G, D) — all f32.
+    Returns (B, Hkv, G, D) in ``dtype``.
+    """
+    m_g = jnp.max(m, axis=2, keepdims=True)  # (B, Hkv, 1, G)
+    corr = jnp.exp(m - m_g)
+    l_g = jnp.sum(l * corr, axis=2)  # (B, Hkv, G)
+    o = jnp.sum(acc * corr[..., None], axis=2)  # (B, Hkv, G, D)
+    return (o / jnp.maximum(l_g, 1e-30)[..., None]).astype(dtype)
+
+
 def _decode_kernel(
-    # scalar prefetch
-    tables_ref,  # (B, max_pages) int32 (clamped to valid page ids)
-    lens_ref,  # (B,) int32
-    # inputs
-    q_ref,  # (1, 1, G, D)
-    k_ref,  # (1, P, 1, D)
-    v_ref,  # (1, P, 1, D)
-    # outputs
-    o_ref,  # (1, 1, G, D)
-    # scratch
-    m_ref,  # (G, 1) f32
-    l_ref,  # (G, 1) f32
-    acc_ref,  # (G, D) f32
-    *,
+    *refs,
+    pages_per_block: int,
+    blocks_per_split: int,
     scale: float,
     window: int,
     softcap: float,
     kv_scale: float = 0.0,
 ):
-    b = pl.program_id(0)
-    p = pl.program_id(2)
-    n_pb = pl.num_programs(2)
-    page_size = k_ref.shape[1]
-    D = q_ref.shape[3]
+    # positional layout: 2 scalar-prefetch, 1 + 2·ppb inputs, 3 outputs,
+    # 3 scratch (see pallas_call below)
+    ppb = pages_per_block
+    tables_ref, lens_ref, q_ref = refs[0], refs[1], refs[2]
+    k_refs = refs[3:3 + ppb]  # each (1, P, 1, D)
+    v_refs = refs[3 + ppb:3 + 2 * ppb]
+    m_out, l_out, acc_out = refs[3 + 2 * ppb:6 + 2 * ppb]
+    m_ref, l_ref, acc_ref = refs[6 + 2 * ppb:]
 
-    @pl.when(p == 0)
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    blk = pl.program_id(3)
+    page_size = k_refs[0].shape[1]
+
+    @pl.when(blk == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     L = lens_ref[b]
+    block_rank = s * blocks_per_split + blk  # global KV-block index
+    first_page = block_rank * ppb
     slot = jax.lax.broadcasted_iota(jnp.int32, (page_size,), 0)
+
+    lives = []
     if window > 0:
         ring = -(-window // page_size) + 1
-        # ring slot → logical position (see ref.ring_slot_positions)
         cur_page = jnp.maximum(L - 1, 0) // page_size
-        lpage = cur_page - ((cur_page - p) % ring)
-        pos = lpage * page_size + slot
-        pos = jnp.where(pos >= L, pos - ring * page_size, pos)
-        live = (pos >= 0) & (pos < L) & (pos >= L - window)
-        page_live = p < ring
+        for j in range(ppb):
+            pg = first_page + j
+            # ring slot → logical position (see ref.ring_slot_positions)
+            lpage = cur_page - ((cur_page - pg) % ring)
+            pos = lpage * page_size + slot
+            pos = jnp.where(pos >= L, pos - ring * page_size, pos)
+            lives.append((pos >= 0) & (pos < L) & (pos >= L - window)
+                         & (pg < ring))
+        block_live = first_page < ring
     else:
-        pos = p * page_size + slot
-        live = pos < L
-        page_live = p * page_size < L
+        for j in range(ppb):
+            pos = (first_page + j) * page_size + slot
+            lives.append(pos < L)
+        block_live = first_page * page_size < L
+    live = jnp.concatenate(lives)  # (ppb·P,)
 
-    @pl.when(page_live)
+    @pl.when(block_live)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (P, D)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        k = jnp.concatenate([r[0, :, 0, :] for r in k_refs], axis=0)
+        v = jnp.concatenate([r[0, :, 0, :] for r in v_refs], axis=0)
+        k = k.astype(jnp.float32)  # (ppb·P, D)
+        v = v.astype(jnp.float32)
         if kv_scale > 0:  # int8 pages: dequantize the VMEM tile in-register
             k = k * kv_scale
             v = v * kv_scale
 
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)  # (G, P)
+        s_ = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
         if softcap > 0:
-            s = softcap * jnp.tanh(s / softcap)
-        s = jnp.where(live[None, :], s, NEG_INF)
+            s_ = softcap * jnp.tanh(s_ / softcap)
+        s_ = jnp.where(live[None, :], s_, NEG_INF)  # (G, ppb·P)
 
         m_prev = m_ref[...]  # (G, 1)
-        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_cur = jnp.max(s_, axis=1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
         alpha = jnp.exp(m_prev - m_new)
-        pexp = jnp.where(live[None, :], jnp.exp(s - m_new), 0.0)  # (G, P)
+        pexp = jnp.where(live[None, :], jnp.exp(s_ - m_new), 0.0)
 
         l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -113,10 +202,34 @@ def _decode_kernel(
             preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
-    @pl.when(p == n_pb - 1)
-    def _finish():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+    @pl.when(blk == blocks_per_split - 1)
+    def _emit_partial():
+        m_out[0, 0, 0] = m_ref[...][:, 0]
+        l_out[0, 0, 0] = l_ref[...][:, 0]
+        acc_out[0, 0, 0] = acc_ref[...]
+
+
+def _blocked_tables(block_tables: jax.Array, lens: jax.Array, *,
+                    num_pages: int, page_size: int, window: int,
+                    padded_pages: int, pages_per_block: int) -> jax.Array:
+    """(B, max_pages) table → rank-clamped (B, n_blocks, ppb) table slice.
+
+    Dense path: slot ranks are clamped to the last live page of each row,
+    so every dead entry repeats an already-streamed page and its DMA is
+    elided by the pipeline (same block index as the previous step).
+    Windowed path: every ring slot may be live, so only pad-clamp.
+    """
+    B, max_pages = block_tables.shape
+    safe = jnp.clip(block_tables, 0, num_pages - 1).astype(jnp.int32)
+    rank = jnp.arange(padded_pages, dtype=jnp.int32)[None, :]
+    if window > 0:
+        rank = jnp.broadcast_to(jnp.minimum(rank, max_pages - 1),
+                                (B, padded_pages))
+    else:
+        n_live = jnp.maximum(-(-lens // page_size), 1).astype(jnp.int32)
+        rank = jnp.minimum(rank, n_live[:, None] - 1)
+    flat = jnp.take_along_axis(safe, rank, axis=1)
+    return flat.reshape(B, padded_pages // pages_per_block, pages_per_block)
 
 
 def paged_attention_kernel(
@@ -129,42 +242,100 @@ def paged_attention_kernel(
     scale: float,
     window: int = 0,
     softcap: float = 0.0,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     kv_scale: float = 0.0,
+    pages_per_block: int = 1,
+    num_splits: int = 1,
 ) -> jax.Array:
+    m, l, acc = paged_attention_partials(
+        q, k_pages, v_pages, block_tables, lens, scale=scale, window=window,
+        softcap=softcap, interpret=interpret, kv_scale=kv_scale,
+        pages_per_block=pages_per_block, num_splits=num_splits)
+    return combine_partials(m, l, acc, dtype=q.dtype)
+
+
+def paged_attention_partials(
+    q: jax.Array,  # (B, n_kv, G, D)
+    k_pages: jax.Array,  # (num_pages, P, n_kv, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages)
+    lens: jax.Array,  # (B,)
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: Optional[bool] = None,
+    kv_scale: float = 0.0,
+    pages_per_block: int = 1,
+    num_splits: int = 1,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Split-K partials: ((B,n_kv,S,G) m, (B,n_kv,S,G) l, (B,n_kv,S,G,D) acc)."""
     B, n_kv, G, D = q.shape
     num_pages, page_size, _, _ = k_pages.shape
     max_pages = block_tables.shape[1]
 
-    tables = jnp.clip(block_tables, 0, num_pages - 1).astype(jnp.int32)
+    ppb, _, S, bps = decode_partition(max_pages, pages_per_block, num_splits)
+    padded_pages = S * bps * ppb
 
-    def q_map(b, h, p, tables, lens):
+    tables3d = _blocked_tables(
+        block_tables, lens, num_pages=num_pages, page_size=page_size,
+        window=window, padded_pages=padded_pages, pages_per_block=ppb)
+
+    def q_map(b, h, s, blk, tables, lens):
         return (b, h, 0, 0)
 
-    def kv_map(b, h, p, tables, lens):
-        del lens
-        return (tables[b, p], 0, h, 0)
+    def part_map(b, h, s, blk, tables, lens):
+        return (b, h, s, 0)
 
-    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
-                               softcap=softcap, kv_scale=kv_scale)
+    def acc_map(b, h, s, blk, tables, lens):
+        return (b, h, s, 0, 0)
+
+    def kv_map(b, h, s, blk, tables, lens, *, j):
+        del lens
+        return (tables[b, s * bps + blk, j], 0, h, 0)
+
+    kv_spec = lambda j: pl.BlockSpec((1, page_size, 1, D),
+                                     functools.partial(kv_map, j=j))
+
+    kernel = functools.partial(
+        _decode_kernel, pages_per_block=ppb, blocks_per_split=bps,
+        scale=scale, window=window, softcap=softcap, kv_scale=kv_scale)
 
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
-            grid=(B, n_kv, max_pages),
-            in_specs=[
-                pl.BlockSpec((1, 1, G, D), q_map),
-                pl.BlockSpec((1, page_size, 1, D), kv_map),
-                pl.BlockSpec((1, page_size, 1, D), kv_map),
+            grid=(B, n_kv, S, bps),
+            in_specs=(
+                [pl.BlockSpec((1, 1, G, D), q_map)]
+                + [kv_spec(j) for j in range(ppb)]       # k pages of a block
+                + [kv_spec(j) for j in range(ppb)]       # v pages of a block
+            ),
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, G), part_map),
+                pl.BlockSpec((1, 1, 1, G), part_map),
+                pl.BlockSpec((1, 1, 1, G, D), acc_map),
             ],
-            out_specs=pl.BlockSpec((1, 1, G, D), q_map),
             scratch_shapes=[
                 pltpu.VMEM((G, 1), jnp.float32),
                 pltpu.VMEM((G, 1), jnp.float32),
                 pltpu.VMEM((G, D), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, n_kv, G, D), q.dtype),
-        interpret=interpret,
-    )(tables, lens.astype(jnp.int32), q, k_pages, v_pages)
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_kv, S, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, S, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, S, G, D), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(tables3d, lens.astype(jnp.int32), q,
+      *([k_pages] * ppb), *([v_pages] * ppb))
+
+
+def decode_grid_steps(max_pages: int, *, pages_per_block: int = 1,
+                      num_splits: int = 1) -> int:
+    """Grid steps per (batch, kv_head) pair — the kernel-launch-overhead
+    metric `benchmarks/fig4_decode.py` reports (one-page baseline =
+    ``max_pages``)."""
+    _, _, S, bps = decode_partition(max_pages, pages_per_block, num_splits)
+    return S * bps

@@ -3,11 +3,18 @@
 Implements Alg.1 GATHER + standard masked attention: materialise each
 sequence's K/V from its pages, then softmax(q·Kᵀ)·V.  This is the
 "numerical equivalence" baseline the paper validates against (§IV-B3).
+
+Also provides the split-K oracle pair used to validate the flash-decoding
+path of the blocked kernel: ``paged_attention_partials_ref`` computes the
+per-partition un-normalised ``(m, l, acc)`` softmax partials over a
+contiguous range of pages, and ``combine_partials_ref`` merges them with
+the numerically-stable correction — the reference for the kernel-side
+combine in ``paged_attention.combine_partials``.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,14 +56,31 @@ def paged_attention_ref(
     kv_scale: float = 0.0,  # >0: int8 pools, dequantize gathered slices
 ) -> jax.Array:
     B, n_heads, head_dim = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(head_dim)
+    scores, live, v = _gathered_scores(
+        q, k_pages, v_pages, block_tables, lens, scale=scale, window=window,
+        softcap=softcap, kv_scale=kv_scale)
+    scores = jnp.where(live[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, n_heads, head_dim).astype(q.dtype)
+
+
+def _gathered_scores(q, k_pages, v_pages, block_tables, lens, *,
+                     scale, window, softcap, kv_scale):
+    """Shared prologue of the full oracle AND the split-K partials oracle
+    (both must validate the same gather/mask/softcap semantics): gathered
+    K/V, softcapped f32 scores, live mask.
+
+    Returns (scores (B,Hkv,G,S) f32, live (B,S), v (B,S,Hkv,D)).
+    """
+    B, n_heads, head_dim = q.shape
     num_pages, page_size, n_kv, _ = k_pages.shape
     max_pages = block_tables.shape[1]
     S = max_pages * page_size
-    scale = scale if scale is not None else 1.0 / np.sqrt(head_dim)
 
     safe = jnp.clip(block_tables, 0, num_pages - 1)
-    # barrier: pin dtype converts to the gathered slice, not the pool
-    # (see core/attention.py — CPU float-normalization artifact)
     k = jax.lax.optimization_barrier(k_pages[safe].reshape(B, S, n_kv, head_dim))
     v = jax.lax.optimization_barrier(v_pages[safe].reshape(B, S, n_kv, head_dim))
     if kv_scale > 0:
@@ -65,7 +89,7 @@ def paged_attention_ref(
 
     if window > 0:
         ring = -(-window // page_size) + 1
-        pos = ring_slot_positions(lens, page_size, ring, S)  # (B, S)
+        pos = ring_slot_positions(lens, page_size, ring, S)
         live = (pos >= 0) & (pos < lens[:, None]) & (pos >= lens[:, None] - window)
     else:
         pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
@@ -74,11 +98,93 @@ def paged_attention_ref(
 
     g = n_heads // n_kv
     qg = q.reshape(B, n_kv, g, head_dim) * scale
-    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(q.dtype))
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(q.dtype)
+                        ).astype(jnp.float32)
     if softcap > 0:
         scores = softcap * jnp.tanh(scores / softcap)
-    scores = jnp.where(live[:, None, None, :], scores, -jnp.inf)
-    w = jax.nn.softmax(scores, axis=-1)
-    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows
-    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(q.dtype))
-    return out.reshape(B, n_heads, head_dim)
+    return scores, live, v
+
+
+def paged_attention_partials_ref(
+    q: jax.Array,  # (B, n_heads, head_dim)
+    k_pages: jax.Array,  # (num_pages, page_size, n_kv, head_dim)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages)
+    lens: jax.Array,  # (B,)
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,
+    softcap: float = 0.0,
+    kv_scale: float = 0.0,
+    num_splits: int = 1,
+    pages_per_block: int = 1,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Split-K oracle: per-partition un-normalised softmax partials.
+
+    The page list is cut at KV-*block* granularity into ``num_splits``
+    contiguous ranges — the identical partitioning the kernel's split-K
+    grid axis uses (blocks of ``pages_per_block`` pages, then
+    ``ceil(n_blocks / num_splits)`` blocks per split), so per-split
+    partials are directly comparable.  The last partition may be ragged
+    and a wholly-dead partition yields (NEG_INF, 0, 0), which drops out
+    of the combine exactly.
+
+    Returns (m, l, acc) with GQA-grouped shapes
+    ((B,Hkv,S,G), (B,Hkv,S,G), (B,Hkv,S,G,D)) — f32.
+    """
+    NEG_INF = -1e30
+    B, n_heads, head_dim = q.shape
+    n_kv = k_pages.shape[2]
+    page_size = k_pages.shape[1]
+    max_pages = block_tables.shape[1]
+    S_tok = max_pages * page_size
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(head_dim))
+
+    scores, live, v = _gathered_scores(
+        q, k_pages, v_pages, block_tables, lens, scale=scale, window=window,
+        softcap=softcap, kv_scale=kv_scale)
+
+    from repro.kernels.paged_attention.paged_attention import decode_partition
+    ppb, _, ns, bps = decode_partition(max_pages, pages_per_block, num_splits)
+    chunk = bps * ppb * page_size
+
+    g = n_heads // n_kv
+    ms, ls, accs = [], [], []
+    for s in range(ns):
+        lo, hi = s * chunk, min((s + 1) * chunk, S_tok)
+        if lo >= hi:  # split made of padding blocks only — dead partition
+            ms.append(jnp.full((B, n_kv, g), NEG_INF, jnp.float32))
+            ls.append(jnp.zeros((B, n_kv, g), jnp.float32))
+            accs.append(jnp.zeros((B, n_kv, g, head_dim), jnp.float32))
+            continue
+        sl = scores[..., lo:hi]
+        lv = live[:, None, None, lo:hi]
+        sl = jnp.where(lv, sl, NEG_INF)
+        m = jnp.max(sl, axis=-1)
+        m = jnp.where(m > NEG_INF / 2, m, NEG_INF)  # wholly-dead partition
+        p = jnp.where(lv, jnp.exp(sl - m[..., None]), 0.0)
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("bkgs,bskd->bkgd", p,
+                         v[:, lo:hi].astype(jnp.float32))
+        ms.append(m)
+        ls.append(l)
+        accs.append(acc)
+    m = jnp.stack(ms, axis=2)  # (B, Hkv, ns, G)
+    l = jnp.stack(ls, axis=2)
+    acc = jnp.stack(accs, axis=2)  # (B, Hkv, ns, G, D)
+    return m, l, acc
+
+
+def combine_partials_ref(m: jax.Array, l: jax.Array, acc: jax.Array
+                         ) -> jax.Array:
+    """Reference flash-decoding combine over the split axis (axis=2).
+
+    m, l: (B, Hkv, S, G); acc: (B, Hkv, S, G, D).  Returns (B, H, D) f32.
+    """
+    m_g = jnp.max(m, axis=2, keepdims=True)
+    corr = jnp.exp(m - m_g)
+    l_g = jnp.sum(l * corr, axis=2)
+    o = jnp.sum(acc * corr[..., None], axis=2)
+    o = o / jnp.maximum(l_g, 1e-30)[..., None]
+    B, n_kv, g, D = o.shape
+    return o.reshape(B, n_kv * g, D)

@@ -114,7 +114,9 @@ def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
                 k_pages: jax.Array, v_pages: jax.Array, tables: jax.Array,
                 positions: jax.Array, *, window: int = 0,
                 impl: str = "ref", attn_ctx: Optional[Dict] = None,
-                interpret: bool = True
+                interpret: Optional[bool] = None,
+                pages_per_block: Optional[int] = None,
+                num_splits: Optional[int] = None,
                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Decode one token.  x: (B, d); positions: (B,) 0-based position of the
     incoming token; tables: (B, n_kv_shards, pages_per_shard).  Appends K/V
@@ -123,6 +125,8 @@ def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
     ``attn_ctx`` = {"scheme": local|tp|dp|kvp, "batch_axes": (...)} selects
     the distribution scheme (DESIGN.md §4); windowed layers degrade kvp→dp
     (bounded ring pools are replicated across "model", not striped).
+    ``pages_per_block`` / ``num_splits`` tune the Pallas decode kernel's
+    KV-block width and flash-decoding split-K factor (None → auto).
 
     Returns (out, k_pages', v_pages').
     """
@@ -146,7 +150,8 @@ def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
     o4 = decode_attention_sharded(
         q4, k_pages, v_pages, tables, positions + 1, window=window,
         scheme=scheme, batch_axes=batch_axes, impl=impl, interpret=interpret,
-        kv_scale=cfg.kv_scale if cfg.kv_dtype == "int8" else 0.0)
+        kv_scale=cfg.kv_scale if cfg.kv_dtype == "int8" else 0.0,
+        pages_per_block=pages_per_block, num_splits=num_splits)
     return _out(p, o4.reshape(B, H, hd)), k_pages, v_pages
 
 

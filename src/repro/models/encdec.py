@@ -184,7 +184,10 @@ class EncDecModel:
 
     def decode_step(self, params: Dict, tokens: jax.Array, state: Dict,
                     impl: str = "ref", attn_ctx: Optional[Dict] = None,
-                    interpret: bool = True) -> Tuple[jax.Array, Dict]:
+                    interpret: Optional[bool] = None,
+                    pages_per_block: Optional[int] = None,
+                    num_splits: Optional[int] = None
+                    ) -> Tuple[jax.Array, Dict]:
         cfg = self.cfg
         B = tokens.shape[0]
         pos = state["pos"]
@@ -200,7 +203,8 @@ class EncDecModel:
             h = layers.apply_norm(p["ln1"], x)
             o, kp, vp = attn.attn_decode(
                 p["self_attn"], h, cfg, kp, vp, tables, pos, impl=impl,
-                attn_ctx=attn_ctx, interpret=interpret)
+                attn_ctx=attn_ctx, interpret=interpret,
+                pages_per_block=pages_per_block, num_splits=num_splits)
             x = x + o
             h = layers.apply_norm(p["lnx"], x)
             x = x + attn.cross_attn(p["cross_attn"], h, ck, cv, cfg)

@@ -554,7 +554,10 @@ class TransformerModel:
 
     def decode_step(self, params: Dict, tokens: jax.Array, state: Dict,
                     impl: str = "ref", attn_ctx: Optional[Dict] = None,
-                    interpret: bool = True) -> Tuple[jax.Array, Dict]:
+                    interpret: Optional[bool] = None,
+                    pages_per_block: Optional[int] = None,
+                    num_splits: Optional[int] = None
+                    ) -> Tuple[jax.Array, Dict]:
         """tokens: (B,) → (logits (B, V), state').  Scanned over groups.
 
         The full stacked caches travel through the scan as *carry* and are
@@ -602,7 +605,8 @@ class TransformerModel:
                 kp, vp = caches["kp"], caches["vp"]
                 o, kp, vp = attn.attn_decode(
                     p["attn"], h, cfg, kp, vp, tables, pos, window=w,
-                    impl=impl, attn_ctx=attn_ctx, interpret=interpret)
+                    impl=impl, attn_ctx=attn_ctx, interpret=interpret,
+                    pages_per_block=pages_per_block, num_splits=num_splits)
                 caches["kp"], caches["vp"] = kp, vp
                 x = x + o
             elif code == "C":

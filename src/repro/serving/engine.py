@@ -44,10 +44,16 @@ class Engine:
         impl: str = "ref",
         rng: Optional[jax.Array] = None,
         dtype=jnp.float32,
+        interpret: Optional[bool] = None,  # None → auto (off-TPU: interpret)
+        pages_per_block: Optional[int] = None,  # decode kernel knobs;
+        num_splits: Optional[int] = None,  # None → auto-tuned per shape
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.impl = impl
+        self.interpret = interpret
+        self.pages_per_block = pages_per_block
+        self.num_splits = num_splits
         self.dtype = dtype
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -279,7 +285,9 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _decode_fn(self, params, tokens, state):
-        return self.model.decode_step(params, tokens, state, impl=self.impl)
+        return self.model.decode_step(
+            params, tokens, state, impl=self.impl, interpret=self.interpret,
+            pages_per_block=self.pages_per_block, num_splits=self.num_splits)
 
     def _decode(self) -> None:
         st = dict(self.state)

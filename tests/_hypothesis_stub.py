@@ -1,0 +1,97 @@
+"""Minimal stand-in for `hypothesis` when it isn't installed.
+
+The container image doesn't ship hypothesis; without it the two
+property-test modules fail at *collection* and take the whole tier-1 run
+down with them.  This stub implements just the surface those modules use
+(`given`, `settings`, `strategies.{integers,sampled_from,lists,tuples,
+randoms}`) as deterministic random sampling: each `@given` test runs
+``max_examples`` drawn examples from a fixed seed.  No shrinking, no
+database — if an example fails, the raw failing inputs are in the
+traceback.  Installed into ``sys.modules`` by conftest only when the real
+package is missing, so environments with hypothesis are unaffected.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+from typing import Any, Callable, List
+
+_SEED = 0x5EED
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[random.Random], Any]):
+        self._sample = sample
+
+    def sample(self, rnd: random.Random) -> Any:
+        return self._sample(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    return _Strategy(lambda r: [elements.sample(r)
+                                for _ in range(r.randint(min_size, max_size))])
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda r: tuple(s.sample(r) for s in strategies))
+
+
+def randoms() -> _Strategy:
+    return _Strategy(lambda r: random.Random(r.randint(0, 2**31 - 1)))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored) -> Callable:
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy) -> Callable:
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(_SEED)
+            for _ in range(n):
+                args = [s.sample(rnd) for s in arg_strategies]
+                kwargs = {k: s.sample(rnd) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+
+        # plain __name__/__doc__ copy on purpose: functools.wraps would set
+        # __wrapped__ and pytest would then demand fixtures for the
+        # strategy-bound parameters of the original signature.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def _install() -> None:
+    if "hypothesis" in sys.modules:  # pragma: no cover — real package wins
+        return
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "lists", "tuples", "randoms"):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -132,3 +132,119 @@ def test_fully_masked_row_is_zero(rng):
     out = paged_attention(q, kp, vp, tables, lens, impl="ref")
     assert not np.isnan(np.asarray(out)).any()
     assert np.abs(np.asarray(out)[1]).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# blocked multi-page KV + flash-decoding split-K (kernel v2)
+
+BLOCK_SPLIT_GRID = [(ppb, ns) for ppb in (1, 2, 4) for ns in (1, 3)]
+VARIANTS = ["plain", "window", "softcap", "int8"]
+
+
+def _variant_case(rng, variant):
+    """Ragged lens leaving partial blocks AND empty split-K partitions:
+    seq1's 2 live pages put every later split's whole range past len."""
+    B, H, Hkv, D, page = 2, 8, 4, 32, 8
+    if variant == "window":
+        window, mp = 20, -(-20 // page) + 1  # ring cache
+        num_pages = B * mp
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (B, H, D))
+        kp = jax.random.normal(ks[1], (num_pages, page, Hkv, D))
+        vp = jax.random.normal(ks[2], (num_pages, page, Hkv, D))
+        tables = jnp.arange(num_pages, dtype=jnp.int32).reshape(B, mp)
+        lens = jnp.asarray([65, 9], jnp.int32)
+        return q, kp, vp, tables, lens, dict(window=window)
+    q, kp, vp, tables, lens = make_case(rng, B, H, Hkv, D, page, 9, [65, 9])
+    if variant == "softcap":
+        return q, kp, vp, tables, lens, dict(softcap=30.0)
+    if variant == "int8":
+        scale = 0.035
+        kp8 = jnp.clip(jnp.round(kp / scale), -127, 127).astype(jnp.int8)
+        vp8 = jnp.clip(jnp.round(vp / scale), -127, 127).astype(jnp.int8)
+        return q, kp8, vp8, tables, lens, dict(kv_scale=scale)
+    return q, kp, vp, tables, lens, {}
+
+
+@pytest.mark.parametrize("ppb,ns", BLOCK_SPLIT_GRID)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_blocked_splitk_matches_ref(rng, ppb, ns, variant):
+    q, kp, vp, tables, lens, kw = _variant_case(rng, variant)
+    ref = paged_attention_ref(q, kp, vp, tables, lens, **kw)
+    out = paged_attention(q, kp, vp, tables, lens, impl="pallas",
+                          interpret=True, pages_per_block=ppb,
+                          num_splits=ns, **kw)
+    # acceptance bar: split-K path agrees with ref.py to <= 1e-5 max abs
+    assert float(jnp.max(jnp.abs(out - ref))) <= 1e-5
+
+
+def test_splitk_partials_match_ref(rng):
+    """Kernel split-K partials == the ref.py partial-softmax oracle, and the
+    combine reproduces full attention (incl. empty partitions)."""
+    from repro.kernels.paged_attention.paged_attention import (
+        combine_partials, paged_attention_partials)
+    from repro.kernels.paged_attention.ref import (
+        combine_partials_ref, paged_attention_partials_ref)
+
+    B, H, Hkv, D, page, mp = 2, 8, 4, 32, 8, 9
+    ppb, ns = 2, 3
+    q, kp, vp, tables, lens = make_case(rng, B, H, Hkv, D, page, mp, [65, 9])
+    scale = 1.0 / np.sqrt(D)
+    m, l, acc = paged_attention_partials(
+        q.reshape(B, Hkv, H // Hkv, D), kp, vp, tables, lens, scale=scale,
+        interpret=True, pages_per_block=ppb, num_splits=ns)
+    mr, lr, accr = paged_attention_partials_ref(
+        q, kp, vp, tables, lens, num_splits=ns, pages_per_block=ppb)
+    assert float(jnp.max(jnp.abs(m - mr))) <= 1e-5
+    assert float(jnp.max(jnp.abs(l - lr))) <= 1e-5
+    assert float(jnp.max(jnp.abs(acc - accr))) <= 1e-5
+    out = combine_partials(m, l, acc).reshape(B, H, D)
+    ref_out = combine_partials_ref(mr, lr, accr)
+    assert_close(out, ref_out, rtol=1e-5, atol=1e-5)
+    assert_close(out, paged_attention_ref(q, kp, vp, tables, lens),
+                 rtol=1e-5, atol=1e-5)
+
+
+def test_empty_split_partition_is_neutral(rng):
+    """A split whose whole page range is past len must emit (NEG_INF, 0, 0)
+    and change nothing in the combine."""
+    from repro.kernels.paged_attention.paged_attention import (
+        NEG_INF, paged_attention_partials)
+
+    B, H, Hkv, D, page, mp = 1, 4, 2, 16, 4, 8
+    q, kp, vp, tables, lens = make_case(rng, B, H, Hkv, D, page, mp, [5])
+    m, l, acc = paged_attention_partials(
+        q.reshape(B, Hkv, H // Hkv, D), kp, vp, tables, lens,
+        scale=1.0 / np.sqrt(D), interpret=True,
+        pages_per_block=1, num_splits=4)
+    # pages 2..7 are dead -> splits 1..3 are empty partitions
+    assert np.all(np.asarray(m)[:, :, 1:] == NEG_INF)
+    assert np.all(np.asarray(l)[:, :, 1:] == 0.0)
+    assert np.all(np.asarray(acc)[:, :, 1:] == 0.0)
+
+
+def test_blocked_kernel_grid_step_reduction():
+    """Acceptance: >= 4x fewer grid steps at seq 2048 / page 16 than the
+    one-page-per-step baseline, with auto-tuned knobs."""
+    from repro.kernels.paged_attention.ops import choose_decode_params
+    from repro.kernels.paged_attention.paged_attention import decode_grid_steps
+
+    max_pages = 2048 // 16
+    ppb, ns = choose_decode_params(max_pages, 16, 128)
+    baseline = decode_grid_steps(max_pages)  # one page per step
+    blocked = decode_grid_steps(max_pages, pages_per_block=ppb, num_splits=ns)
+    assert baseline == max_pages
+    assert blocked * 4 <= baseline
+
+
+def test_auto_knobs_clamp_to_legal_ranges():
+    from repro.kernels.paged_attention.ops import choose_decode_params
+
+    ppb, ns = choose_decode_params(1, 64, 64)  # single-page cache
+    assert (ppb, ns) == (1, 1)
+    ppb, ns = choose_decode_params(4, 16, 64, pages_per_block=64,
+                                   num_splits=64)
+    assert ppb == 4 and ns <= 4  # clamped to the table
+    ppb, ns = choose_decode_params(256, 16, 128)
+    assert ppb * 16 == 128  # MXU-aligned block
+    assert 1 <= ns <= 8
