@@ -1,9 +1,8 @@
 # Local verification targets — run `make verify` before pushing.
 #
-#   test        the tier-1 gate, verbatim (pytest -x -q) — halts on the
-#               known pre-existing failures below, like the harness does
-#   test-clean  tier-1 minus the failures that ship with the seed, so new
-#               regressions are actually reachable locally
+#   test        the tier-1 gate, verbatim (pytest -x -q)
+#   test-clean  tier-1 minus KNOWN_FAIL (empty since PR 2 fixed every
+#               seed-era failure — the two targets currently coincide)
 #   bench-fast  smoke run of the decode benches, incl. the blocked/split-K
 #               kernel sweep — catches perf-knob regressions (grid-step
 #               blowups, kernel/oracle divergence) that unit tests miss
@@ -12,11 +11,10 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-# Failing since the seed commit (see CHANGES.md) — not gated on here:
-KNOWN_FAIL = \
-  --deselect tests/test_engine.py::test_fork_prefix_sharing_is_exact_and_copy_on_write \
-  --deselect tests/test_distributed_multi.py::test_ring_attention_matches_dense \
-  --deselect tests/test_distributed_multi.py::test_kvp_flash_decoding_matches_local
+# Seed-era failures, all fixed in PR 2 (fork tail-copy length bug; the
+# jax.lax.axis_size compat shim) — the deselect list is empty and stays
+# here only as the hook for any future genuinely-pre-existing failure.
+KNOWN_FAIL =
 
 .PHONY: test test-clean bench-fast verify
 

@@ -50,7 +50,7 @@ def run(fast: bool = False):
         mp = -(-S // ps)
         # grid accounting is free — report it for every seq_len, even the
         # ones --fast skips timing for
-        ppb, ns = choose_decode_params(mp, ps, D)
+        ppb, ns, _ = choose_decode_params(mp, ps, D)
         g1 = decode_grid_steps(mp)
         gb = decode_grid_steps(mp, pages_per_block=ppb, num_splits=ns)
         gx = round(g1 / gb, 2)

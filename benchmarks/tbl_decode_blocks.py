@@ -1,8 +1,12 @@
-"""Decode-kernel tuning sweep: pages_per_block × num_splits.
+"""Decode-kernel tuning sweep: pages_per_block × num_splits × combine_mode.
 
 For each knob combination this reports the grid-step count per
 (batch, kv_head) pair, interpret-mode wall time, and max abs error vs the
-jnp oracle — so a perf win is never a silent correctness loss.
+jnp oracle — so a perf win is never a silent correctness loss.  Each
+(ppb, splits) point runs under both split-K combine implementations
+("jnp" epilogue vs the fused "pallas" kernel); ``jnp_vs_pallas`` is the
+max abs divergence between the two, the bench-level echo of the
+conformance suite's 1e-5 gate.
 
 ``grid_steps`` is the hardware-relevant metric: on a real TPU each grid
 step pays fixed pipeline overhead and a sliver-shaped matmul, so fewer,
@@ -54,25 +58,36 @@ def run(fast: bool = False):
     # label rows with the *effective* (clamped) knobs, deduped — a short
     # sequence clamps num_splits down and a mislabeled row would read as
     # "split-K costs more for nothing"
-    auto = choose_decode_params(mp, PAGE_SIZE, D)
-    rows = [("auto",) + auto]
-    seen = {auto}
+    ppb_a, ns_a, cm_auto = choose_decode_params(mp, PAGE_SIZE, D)
+    rows = [("auto", ppb_a, ns_a)]
+    seen = {(ppb_a, ns_a)}
     for req in sweep:
-        eff = choose_decode_params(mp, PAGE_SIZE, D, *req)
-        if eff not in seen:
-            seen.add(eff)
-            rows.append(("fixed",) + eff)
+        ppb_e, ns_e, _ = choose_decode_params(mp, PAGE_SIZE, D, *req)
+        if (ppb_e, ns_e) not in seen:
+            seen.add((ppb_e, ns_e))
+            rows.append(("fixed", ppb_e, ns_e))
 
     t = Table(f"tbl_decode_blocks_s{seq_len}",
-              ["ppb_x_splits", "us_per_call", "grid_steps", "max_abs_err"])
+              ["ppb_x_splits", "combine", "us_per_call", "grid_steps",
+               "max_abs_err", "jnp_vs_pallas"])
     for tag, ppb, ns in rows:
-        fn = jax.jit(lambda q, kp, vp, bt, l, ppb=ppb, ns=ns: decode_attention(
-            q, kp, vp, bt, l, impl="pallas", interpret=True,
-            pages_per_block=ppb, num_splits=ns))
-        us = timeit(fn, q, kp, vp, bt, lens, warmup=1, iters=2) * 1e6
-        err = float(jnp.max(jnp.abs(fn(q, kp, vp, bt, lens) - ref)))
         steps = decode_grid_steps(mp, pages_per_block=ppb, num_splits=ns)
         label = f"{ppb}x{ns}" + ("_auto" if tag == "auto" else "")
-        t.add(label, round(us, 1), steps, f"{err:.2e}")
+        outs, uss, errs = {}, {}, {}
+        for cm in ("jnp", "pallas"):
+            fn = jax.jit(
+                lambda q, kp, vp, bt, l, ppb=ppb, ns=ns, cm=cm:
+                decode_attention(q, kp, vp, bt, l, impl="pallas",
+                                 interpret=True, pages_per_block=ppb,
+                                 num_splits=ns, combine_mode=cm))
+            uss[cm] = timeit(fn, q, kp, vp, bt, lens, warmup=1, iters=2) * 1e6
+            outs[cm] = fn(q, kp, vp, bt, lens)
+            errs[cm] = float(jnp.max(jnp.abs(outs[cm] - ref)))
+        div = float(jnp.max(jnp.abs(outs["jnp"] - outs["pallas"])))
+        for cm in ("jnp", "pallas"):
+            # '*' marks the mode the auto-tuner picks for these knobs
+            star = "*" if (tag == "auto" and cm == cm_auto) else ""
+            t.add(label, cm + star, round(uss[cm], 1), steps,
+                  f"{errs[cm]:.2e}", f"{div:.2e}")
     t.show()
     return t

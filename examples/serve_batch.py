@@ -35,6 +35,10 @@ def main():
                     help="Pallas kernel KV-block width (default: auto)")
     ap.add_argument("--num-splits", type=int, default=None,
                     help="Pallas kernel split-K factor (default: auto)")
+    ap.add_argument("--combine-mode", default=None,
+                    choices=["jnp", "pallas"],
+                    help="split-K merge: fused Pallas combine kernel or "
+                         "jnp epilogue (default: auto — pallas iff split-K)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
@@ -46,7 +50,8 @@ def main():
     eng = Engine(cfg, max_slots=slots, max_seq_len=max_seq,
                  pool_tokens=pool, impl=args.impl,
                  pages_per_block=args.pages_per_block,
-                 num_splits=args.num_splits)
+                 num_splits=args.num_splits,
+                 combine_mode=args.combine_mode)
     reqs = wave(rng, args.requests, max_seq - args.max_new, args.max_new)
     t0 = time.perf_counter()
     eng.generate(reqs, max_steps=3000)

@@ -195,27 +195,33 @@ def decode_attention(
     kv_scale: float = 0.0,
     pages_per_block: Optional[int] = None,
     num_splits: Optional[int] = None,
+    combine_mode: Optional[str] = None,
 ) -> jax.Array:
     """Paged decode attention; distributed combine over ``kv_psum_axes``.
 
     When ``kv_psum_axes`` is non-empty this runs *inside* `shard_map` with
     the page dim sharded across those axes: each shard computes a partial
     online-softmax (m, l, o) over its local pages and the partials merge
-    with the numerically-stable two-pass combine (flash-decoding on a mesh).
+    with the numerically-stable two-pass combine (flash-decoding on a mesh,
+    `collectives.merge_flash_partials` — the same reduction implementation
+    the single-device split-K kernel uses).
     ``page_stride``/``page_offset`` describe round-robin page striping:
     local table slot j holds *logical* page j·stride + offset.
 
     ``pages_per_block`` / ``num_splits`` are the single-device Pallas
     kernel's KV-block width and split-K factor (``None`` → auto-tuned,
     see `choose_decode_params`); the kvp path's split-K happens across the
-    mesh instead, so they only apply to the local kernel.
+    mesh instead, so they only apply to the local kernel.  ``combine_mode``
+    selects the split-K merge implementation on *both* paths ("pallas" =
+    fused combine kernel, "jnp" = epilogue; None → auto).
     """
     if not kv_psum_axes:
         return paged_attention(q, k_pages, v_pages, block_tables, lens,
                                window=window, softcap=softcap, impl=impl,
                                interpret=interpret, kv_scale=kv_scale,
                                pages_per_block=pages_per_block,
-                               num_splits=num_splits)
+                               num_splits=num_splits,
+                               combine_mode=combine_mode)
 
     # --- local partials ---------------------------------------------------
     m_l, l_l, o_l = _partial_decode(q, k_pages, v_pages, block_tables, lens,
@@ -223,12 +229,11 @@ def decode_attention(
                                     page_stride=page_stride,
                                     page_offset=page_offset,
                                     kv_scale=kv_scale)
-    # --- cross-shard combine ----------------------------------------------
-    m_g = jax.lax.pmax(m_l, kv_psum_axes)
-    corr = jnp.exp(m_l - m_g)
-    l_g = jax.lax.psum(l_l * corr, kv_psum_axes)
-    o_g = jax.lax.psum(o_l * corr[..., None], kv_psum_axes)
-    return (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(q.dtype)
+    # --- cross-shard combine (shared with the split-K kernel) --------------
+    from repro.distributed.collectives import merge_flash_partials
+    return merge_flash_partials(m_l, l_l, o_l, kv_psum_axes,
+                                combine_mode=combine_mode,
+                                out_dtype=q.dtype, interpret=interpret)
 
 
 def _partial_decode(q, k_pages, v_pages, block_tables, lens, *, window=0,

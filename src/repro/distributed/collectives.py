@@ -13,9 +13,11 @@ pools + tables enter explicit ``shard_map`` regions here.  Three schemes
   * ``kvp`` — flash-decoding on the mesh (beyond-paper): the page dim is
     round-robin *striped* over every mesh axis not used for batch; each
     shard computes a partial online-softmax over its local pages and the
-    partials merge with a numerically-stable (m, l, o) psum combine.
-    Works for any GQA layout and is what makes batch=1 × 524k-token decode
-    shardable at all.
+    partials merge with the numerically-stable (m, l, o) combine
+    (`merge_flash_partials` — by default the same fused Pallas combine
+    kernel the single-device split-K decode uses, with a pmax/psum
+    fallback under ``combine_mode="jnp"``).  Works for any GQA layout and
+    is what makes batch=1 × 524k-token decode shardable at all.
 
 Table layout contract: tables are (B, n_kv_shards, pages_per_shard); under
 ``kvp`` local slot j of kv-shard s holds logical page j·n_kv_shards + s.
@@ -44,19 +46,71 @@ except ImportError:  # pragma: no cover — older jax
 
 from repro.core import attention as core_attn
 from repro.core import cache as kvcache
-from repro.distributed.sharding import current_mesh
+from repro.distributed.sharding import axis_size, current_mesh
 
 
 def _flat_axis_index(axes: Tuple[str, ...]) -> jax.Array:
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        # axis_size resolves statically from the mesh context (this jax
+        # has no jax.lax.axis_size); axis_index is per-shard as usual
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
 def _mesh_prod(mesh, axes: Tuple[str, ...]) -> int:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return math.prod(sizes[a] for a in axes) if axes else 1
+
+
+def merge_flash_partials(
+    m: jax.Array,  # (B, H) f32 — per-shard running max (NEG_INF if dead)
+    l: jax.Array,  # (B, H) f32 — per-shard softmax mass
+    o: jax.Array,  # (B, H, D) f32 — per-shard un-normalised accumulator
+    axes: Tuple[str, ...],
+    *,
+    combine_mode: Optional[str] = None,
+    out_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Merge per-shard flash-decoding partials over mesh ``axes``.
+
+    Runs *inside* shard_map (the kvp decode path).  ``combine_mode``
+    selects the reduction implementation:
+
+      * ``"pallas"`` — all-gather the shard axis into a split axis and
+        reduce it with the *same* fused combine kernel the single-device
+        split-K pipeline uses (`combine_partials_pallas`, each head its
+        own (b, h) grid slot) — one reduction implementation across the
+        local and distributed paths;
+      * ``"jnp"`` — the two-pass pmax/psum merge (no gather; partials
+        stay shard-resident).
+
+    ``None`` → auto: pallas when more than one shard participates.
+    Returns (B, H, D) in ``out_dtype``.
+    """
+    from repro.kernels.paged_attention.paged_attention import (
+        combine_partials_pallas, resolve_combine_mode)
+
+    n_sh = math.prod(axis_size(a) for a in axes) if axes else 1
+    mode = resolve_combine_mode(combine_mode, n_sh)
+    if mode == "pallas":
+        B, H = m.shape
+        D = o.shape[-1]
+        ms = jax.lax.all_gather(m, axes)  # (n_sh, B, H)
+        ls = jax.lax.all_gather(l, axes)
+        os_ = jax.lax.all_gather(o, axes)  # (n_sh, B, H, D)
+        m4 = ms.transpose(1, 2, 0)[..., None]  # (B, H, S, 1) — G = 1
+        l4 = ls.transpose(1, 2, 0)[..., None]
+        acc5 = os_.transpose(1, 2, 0, 3)[:, :, :, None, :]  # (B, H, S, 1, D)
+        out = combine_partials_pallas(m4, l4, acc5, dtype=out_dtype,
+                                      interpret=interpret)
+        return out.reshape(B, H, D)
+    m_g = jax.lax.pmax(m, axes)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axes)
+    o_g = jax.lax.psum(o * corr[..., None], axes)
+    return (o_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(out_dtype)
 
 
 def decode_attention_sharded(
@@ -75,6 +129,7 @@ def decode_attention_sharded(
     kv_scale: float = 0.0,  # >0: int8 pools with this dequant step
     pages_per_block: Optional[int] = None,  # Pallas KV-block width (None=auto)
     num_splits: Optional[int] = None,  # Pallas split-K factor (None=auto)
+    combine_mode: Optional[str] = None,  # split-K merge impl (None=auto)
 ) -> jax.Array:
     """Returns (B, Hkv, G, hd)."""
     mesh = current_mesh()
@@ -88,7 +143,8 @@ def decode_attention_sharded(
             q, k_pages, v_pages, t, lens, window=window, softcap=softcap,
             impl=impl, kv_psum_axes=kv_psum_axes, page_stride=page_stride,
             page_offset=page_offset, interpret=interpret, kv_scale=kv_scale,
-            pages_per_block=pages_per_block, num_splits=num_splits)
+            pages_per_block=pages_per_block, num_splits=num_splits,
+            combine_mode=combine_mode)
         return o.reshape(b, nk, g, d)
 
     if mesh is None or scheme == "local":

@@ -31,7 +31,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.collectives import shard_map
-from repro.distributed.sharding import current_mesh, current_rules
+from repro.distributed.sharding import axis_size, current_mesh, current_rules
 
 
 def _chunk_partial(q, k, v, q_off, k_off, *, scale, causal, window,
@@ -85,7 +85,7 @@ def _chunk_partial(q, k, v, q_off, k_off, *, scale, causal, window,
 
 def _ring_local(q, k, v, lens, *, axis, scale, causal, window, softcap):
     """Runs inside shard_map: q/k/v (B, S_l, H|Hkv, D) sequence-local."""
-    m_sz = jax.lax.axis_size(axis)
+    m_sz = axis_size(axis)  # static (ring permutation list needs an int)
     r = jax.lax.axis_index(axis)
     B, S_l, H, D = q.shape
     Hkv = k.shape[2]

@@ -116,6 +116,24 @@ def _mesh_axis_sizes(mesh: Mesh) -> Mapping[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def axis_size(name: str) -> int:
+    """Static size of a named mesh axis, usable inside shard_map bodies.
+
+    ``jax.lax.axis_size`` only exists in newer jax; callers here need a
+    *static* int anyway (ring permutation lists, mixed-radix index math),
+    so resolve from the active mesh context first and fall back to the
+    jax primitive when available.
+    """
+    mesh = current_mesh()
+    if mesh is not None and name in mesh.axis_names:
+        return _mesh_axis_sizes(mesh)[name]
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    raise RuntimeError(f"axis_size({name!r}): no active mesh defines it and "
+                       "this jax has no jax.lax.axis_size")
+
+
 def logical_spec(
     logical_axes: Sequence[Optional[str]],
     rules: Optional[AxisRules] = None,

@@ -7,9 +7,12 @@ auto-resolves); ``impl="ref"`` runs the pure-jnp oracle (also the dry-run
 lowering path — see DESIGN.md §7).
 
 ``pages_per_block`` / ``num_splits`` control the kernel's KV-block width
-and flash-decoding split-K factor; ``None`` invokes
-`choose_decode_params`, the auto-tuning heuristic keyed on
-``(max_pages · page_size, page_size, head_dim)``.
+and flash-decoding split-K factor; ``combine_mode`` picks the split-K
+merge implementation ("pallas" = fused on-chip combine kernel, "jnp" =
+XLA epilogue).  ``None`` invokes `choose_decode_params`, the auto-tuning
+heuristic keyed on ``(max_pages · page_size, page_size, head_dim)``,
+which also resolves the combine mode (fused kernel whenever split-K is
+active).
 """
 
 from __future__ import annotations
@@ -23,7 +26,7 @@ import numpy as np
 
 from repro.kernels import resolve_interpret
 from repro.kernels.paged_attention.paged_attention import (
-    decode_partition, paged_attention_kernel)
+    decode_partition, paged_attention_kernel, resolve_combine_mode)
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 # KV tokens per grid step the MXU digests at full width.
@@ -43,8 +46,9 @@ def choose_decode_params(
     head_dim: int,
     pages_per_block: Optional[int] = None,
     num_splits: Optional[int] = None,
-) -> Tuple[int, int]:
-    """Auto-tune (pages_per_block, num_splits) for the decode kernel.
+    combine_mode: Optional[str] = None,
+) -> Tuple[int, int, str]:
+    """Auto-tune (pages_per_block, num_splits, combine_mode).
 
     Heuristic, keyed on the sequence capacity ``max_pages · page_size``,
     the page size, and the head dim:
@@ -55,9 +59,12 @@ def choose_decode_params(
       * split-K grows with the block count (longer sequences → more
         parallel grid slots) but keeps ≥ ``_MIN_BLOCKS_PER_SPLIT`` blocks
         per split and ≤ ``_MAX_SPLITS`` splits — short sequences decode
-        in a single split with zero combine overhead.
+        in a single split with zero combine overhead;
+      * the combine runs as the fused Pallas kernel whenever split-K is
+        active (> 1 split after clamping) and as the trivial jnp epilogue
+        otherwise — a single-split "combine" is just a normalise.
 
-    Explicit values pass through (clamped to legal ranges).
+    Explicit values pass through (clamped / validated).
     """
     if pages_per_block is None:
         target = max(1, _TARGET_BLOCK_TOKENS // max(1, int(page_size)))
@@ -69,13 +76,14 @@ def choose_decode_params(
         num_splits = min(max(1, n_blocks // _MIN_BLOCKS_PER_SPLIT),
                          _MAX_SPLITS)
     _, _, ns, _ = decode_partition(max_pages, ppb, num_splits)
-    return ppb, ns
+    return ppb, ns, resolve_combine_mode(combine_mode, ns)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("scale", "window", "softcap", "impl", "interpret",
-                     "kv_scale", "pages_per_block", "num_splits"),
+                     "kv_scale", "pages_per_block", "num_splits",
+                     "combine_mode"),
 )
 def paged_attention(
     q: jax.Array,  # (B, n_heads, head_dim)
@@ -92,6 +100,7 @@ def paged_attention(
     kv_scale: float = 0.0,  # >0: int8 pools, dequantized on the fly
     pages_per_block: Optional[int] = None,  # None → auto-tuned
     num_splits: Optional[int] = None,  # None → auto-tuned
+    combine_mode: Optional[str] = None,  # None → auto ("pallas" iff split-K)
 ) -> jax.Array:
     """Attention of one query token per sequence over its paged KV cache."""
     B, n_heads, head_dim = q.shape
@@ -105,13 +114,14 @@ def paged_attention(
             q, k_pages, v_pages, block_tables, lens,
             scale=scale, window=window, softcap=softcap, kv_scale=kv_scale)
 
-    ppb, ns = choose_decode_params(max_pages, page_size, head_dim,
-                                   pages_per_block, num_splits)
+    ppb, ns, cm = choose_decode_params(max_pages, page_size, head_dim,
+                                       pages_per_block, num_splits,
+                                       combine_mode)
     G = n_heads // n_kv
     qg = q.reshape(B, n_kv, G, head_dim)
     out = paged_attention_kernel(
         qg, k_pages, v_pages, block_tables, lens,
         scale=scale, window=window, softcap=softcap,
         interpret=resolve_interpret(interpret), kv_scale=kv_scale,
-        pages_per_block=ppb, num_splits=ns)
+        pages_per_block=ppb, num_splits=ns, combine_mode=cm)
     return out.reshape(B, n_heads, head_dim)

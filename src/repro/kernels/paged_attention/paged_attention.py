@@ -22,13 +22,35 @@ pages (= ``pages_per_block * page_size`` KV tokens, MXU-aligned when the
 product is a multiple of 128).  The split-K axis partitions the page list
 into ``num_splits`` contiguous ranges of ``blocks_per_split`` blocks each;
 every ``(b, h, s)`` slot runs an independent online softmax over its range
-and emits an un-normalised partial ``(m, l, acc)``.  A cheap jnp combine
-(`combine_partials`) merges the partials with the numerically-stable
-flash-decoding correction — the same math `ref.combine_partials_ref`
-documents::
+and emits an un-normalised partial ``(m, l, acc)``.  The partials merge
+with the numerically-stable flash-decoding correction — the same math
+`ref.combine_partials_ref` documents::
 
     m* = max_s m_s          l* = Σ_s l_s · exp(m_s − m*)
     o  = Σ_s acc_s · exp(m_s − m*) / max(l*, ε)
+
+Two-kernel pipeline & megacore semantics (v3)
+---------------------------------------------
+The merge runs as the second kernel of a fused two-kernel Pallas
+pipeline (``combine_mode="pallas"``, the default whenever split-K is
+active): `combine_partials_pallas` walks a ``(batch, kv_head)`` grid and
+reduces the whole split axis on-chip per step — max-shift in f32, f32
+accumulation, a single output cast — so the partials never round-trip
+through an XLA epilogue.  ``combine_mode="jnp"`` keeps the plain jnp
+epilogue (`_combine_partials_jnp`); both modes are bit-compatible within
+1e-5 and the conformance suite (`tests/test_combine_conformance.py`)
+gates them against `ref.combine_partials_ref`.
+
+Both kernels carry ``dimension_semantics``: the decode kernel marks
+``(batch, kv_head, split)`` as ``"parallel"`` (the block axis stays
+``"arbitrary"`` — its online softmax accumulates in scratch across
+steps), and the combine kernel marks ``(batch, kv_head)`` parallel.  On
+megacore TPUs Mosaic may therefore place different splits of the *same*
+sequence on different cores — the whole point of flash-decoding split-K
+for batch=1 long-context decode; without the annotation the grid is
+serialised and split-K only ever helped occupancy across batch.
+``interpret=None`` auto-resolution (off-TPU ⇒ interpret mode) applies to
+both kernels, so the pipeline is testable on CPU CI.
 
 Scattered pages per block
 -------------------------
@@ -85,6 +107,14 @@ from repro.kernels import resolve_interpret
 
 NEG_INF = -1e30
 
+# Megacore grid semantics (single source — the conformance suite asserts
+# these).  Decode grid (batch, kv_head, split, block): every (b, h, s)
+# slot is an independent online softmax, so the first three axes may run
+# on different TPU cores; the block axis accumulates in scratch and must
+# stay sequential.  Combine grid (batch, kv_head): fully parallel.
+DECODE_DIM_SEMANTICS = ("parallel", "parallel", "parallel", "arbitrary")
+COMBINE_DIM_SEMANTICS = ("parallel", "parallel")
+
 
 def decode_partition(max_pages: int, pages_per_block: int = 1,
                      num_splits: int = 1) -> Tuple[int, int, int, int]:
@@ -105,18 +135,94 @@ def decode_partition(max_pages: int, pages_per_block: int = 1,
     return ppb, n_blocks, ns, bps
 
 
-def combine_partials(m: jax.Array, l: jax.Array, acc: jax.Array,
-                     dtype=jnp.float32) -> jax.Array:
-    """Merge split-K partials over the split axis (flash-decoding).
+COMBINE_MODES = ("jnp", "pallas")
 
-    m, l: (B, Hkv, S, G); acc: (B, Hkv, S, G, D) — all f32.
-    Returns (B, Hkv, G, D) in ``dtype``.
+
+def resolve_combine_mode(mode: Optional[str], num_splits: int) -> str:
+    """``None``/"auto" → "pallas" when split-K is active, else "jnp".
+
+    A single split needs no cross-split correction — the jnp epilogue is
+    one squeeze + normalise and a kernel launch would be pure overhead.
+    Explicit modes pass through (validated).
     """
+    if mode is None or mode == "auto":
+        return "pallas" if num_splits > 1 else "jnp"
+    if mode not in COMBINE_MODES:
+        raise ValueError(f"combine_mode must be one of {COMBINE_MODES} "
+                         f"or None/'auto', got {mode!r}")
+    return mode
+
+
+def _combine_partials_jnp(m: jax.Array, l: jax.Array, acc: jax.Array,
+                          dtype=jnp.float32) -> jax.Array:
+    """jnp epilogue combine (the v2 path, kept as oracle-adjacent fallback)."""
     m_g = jnp.max(m, axis=2, keepdims=True)  # (B, Hkv, 1, G)
     corr = jnp.exp(m - m_g)
     l_g = jnp.sum(l * corr, axis=2)  # (B, Hkv, G)
     o = jnp.sum(acc * corr[..., None], axis=2)  # (B, Hkv, G, D)
     return (o / jnp.maximum(l_g, 1e-30)[..., None]).astype(dtype)
+
+
+def _combine_kernel(m_ref, l_ref, acc_ref, o_ref):
+    """Reduce the split axis of one (b, h) slot on-chip.
+
+    Blocks: m/l (1, 1, S, G), acc (1, 1, S, G, D), out (1, 1, G, D).
+    Max-shift merge in f32; an all-dead slot (every m == NEG_INF, l == 0)
+    yields exact zeros via the ε-clamped denominator.
+    """
+    m = m_ref[0, 0]  # (S, G) f32
+    l = l_ref[0, 0]
+    acc = acc_ref[0, 0]  # (S, G, D) f32
+    m_g = jnp.max(m, axis=0, keepdims=True)  # (1, G)
+    corr = jnp.exp(m - m_g)  # (S, G)
+    l_g = jnp.sum(l * corr, axis=0)  # (G,)
+    o = jnp.sum(acc * corr[..., None], axis=0)  # (G, D)
+    o_ref[0, 0] = (o / jnp.maximum(l_g, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def combine_partials_pallas(m: jax.Array, l: jax.Array, acc: jax.Array,
+                            dtype=jnp.float32,
+                            interpret: Optional[bool] = None) -> jax.Array:
+    """Fused split-K combine: one tiny Pallas kernel per (batch, kv_head).
+
+    m, l: (B, Hkv, S, G); acc: (B, Hkv, S, G, D) — f32 (cast if not).
+    Returns (B, Hkv, G, D) in ``dtype``.  Both grid axes are marked
+    ``"parallel"`` — every (b, h) reduction is independent, so megacore
+    TPUs split the grid across cores.
+    """
+    B, Hkv, S, G = m.shape
+    D = acc.shape[-1]
+    part_spec = pl.BlockSpec((1, 1, S, G), lambda b, h: (b, h, 0, 0))
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(B, Hkv),
+        in_specs=[
+            part_spec,
+            part_spec,
+            pl.BlockSpec((1, 1, S, G, D), lambda b, h: (b, h, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=COMBINE_DIM_SEMANTICS),
+        interpret=resolve_interpret(interpret),
+    )(m.astype(jnp.float32), l.astype(jnp.float32), acc.astype(jnp.float32))
+
+
+def combine_partials(m: jax.Array, l: jax.Array, acc: jax.Array,
+                     dtype=jnp.float32, mode: Optional[str] = None,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Merge split-K partials over the split axis (flash-decoding).
+
+    m, l: (B, Hkv, S, G); acc: (B, Hkv, S, G, D) — all f32.
+    Returns (B, Hkv, G, D) in ``dtype``.  ``mode`` picks the fused Pallas
+    combine kernel or the jnp epilogue (None → auto by split count).
+    """
+    mode = resolve_combine_mode(mode, m.shape[2])
+    if mode == "pallas":
+        return combine_partials_pallas(m, l, acc, dtype=dtype,
+                                       interpret=interpret)
+    return _combine_partials_jnp(m, l, acc, dtype=dtype)
 
 
 def _decode_kernel(
@@ -246,12 +352,14 @@ def paged_attention_kernel(
     kv_scale: float = 0.0,
     pages_per_block: int = 1,
     num_splits: int = 1,
+    combine_mode: Optional[str] = None,
 ) -> jax.Array:
     m, l, acc = paged_attention_partials(
         q, k_pages, v_pages, block_tables, lens, scale=scale, window=window,
         softcap=softcap, interpret=interpret, kv_scale=kv_scale,
         pages_per_block=pages_per_block, num_splits=num_splits)
-    return combine_partials(m, l, acc, dtype=q.dtype)
+    return combine_partials(m, l, acc, dtype=q.dtype, mode=combine_mode,
+                            interpret=interpret)
 
 
 def paged_attention_partials(
@@ -322,6 +430,8 @@ def paged_attention_partials(
                 pltpu.VMEM((G, D), jnp.float32),
             ],
         ),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=DECODE_DIM_SEMANTICS),
         out_shape=[
             jax.ShapeDtypeStruct((B, n_kv, S, G), jnp.float32),
             jax.ShapeDtypeStruct((B, n_kv, S, G), jnp.float32),

@@ -117,6 +117,7 @@ def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
                 interpret: Optional[bool] = None,
                 pages_per_block: Optional[int] = None,
                 num_splits: Optional[int] = None,
+                combine_mode: Optional[str] = None,
                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Decode one token.  x: (B, d); positions: (B,) 0-based position of the
     incoming token; tables: (B, n_kv_shards, pages_per_shard).  Appends K/V
@@ -126,7 +127,9 @@ def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
     the distribution scheme (DESIGN.md §4); windowed layers degrade kvp→dp
     (bounded ring pools are replicated across "model", not striped).
     ``pages_per_block`` / ``num_splits`` tune the Pallas decode kernel's
-    KV-block width and flash-decoding split-K factor (None → auto).
+    KV-block width and flash-decoding split-K factor; ``combine_mode``
+    picks the split-K merge implementation, local and distributed alike
+    ("pallas" = fused combine kernel, "jnp" = epilogue; None → auto).
 
     Returns (out, k_pages', v_pages').
     """
@@ -151,7 +154,8 @@ def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
         q4, k_pages, v_pages, tables, positions + 1, window=window,
         scheme=scheme, batch_axes=batch_axes, impl=impl, interpret=interpret,
         kv_scale=cfg.kv_scale if cfg.kv_dtype == "int8" else 0.0,
-        pages_per_block=pages_per_block, num_splits=num_splits)
+        pages_per_block=pages_per_block, num_splits=num_splits,
+        combine_mode=combine_mode)
     return _out(p, o4.reshape(B, H, hd)), k_pages, v_pages
 
 

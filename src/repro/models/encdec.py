@@ -186,7 +186,8 @@ class EncDecModel:
                     impl: str = "ref", attn_ctx: Optional[Dict] = None,
                     interpret: Optional[bool] = None,
                     pages_per_block: Optional[int] = None,
-                    num_splits: Optional[int] = None
+                    num_splits: Optional[int] = None,
+                    combine_mode: Optional[str] = None
                     ) -> Tuple[jax.Array, Dict]:
         cfg = self.cfg
         B = tokens.shape[0]
@@ -204,7 +205,8 @@ class EncDecModel:
             o, kp, vp = attn.attn_decode(
                 p["self_attn"], h, cfg, kp, vp, tables, pos, impl=impl,
                 attn_ctx=attn_ctx, interpret=interpret,
-                pages_per_block=pages_per_block, num_splits=num_splits)
+                pages_per_block=pages_per_block, num_splits=num_splits,
+                combine_mode=combine_mode)
             x = x + o
             h = layers.apply_norm(p["lnx"], x)
             x = x + attn.cross_attn(p["cross_attn"], h, ck, cv, cfg)

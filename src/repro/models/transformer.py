@@ -556,7 +556,8 @@ class TransformerModel:
                     impl: str = "ref", attn_ctx: Optional[Dict] = None,
                     interpret: Optional[bool] = None,
                     pages_per_block: Optional[int] = None,
-                    num_splits: Optional[int] = None
+                    num_splits: Optional[int] = None,
+                    combine_mode: Optional[str] = None
                     ) -> Tuple[jax.Array, Dict]:
         """tokens: (B,) → (logits (B, V), state').  Scanned over groups.
 
@@ -606,7 +607,8 @@ class TransformerModel:
                 o, kp, vp = attn.attn_decode(
                     p["attn"], h, cfg, kp, vp, tables, pos, window=w,
                     impl=impl, attn_ctx=attn_ctx, interpret=interpret,
-                    pages_per_block=pages_per_block, num_splits=num_splits)
+                    pages_per_block=pages_per_block, num_splits=num_splits,
+                    combine_mode=combine_mode)
                 caches["kp"], caches["vp"] = kp, vp
                 x = x + o
             elif code == "C":

@@ -47,6 +47,7 @@ class Engine:
         interpret: Optional[bool] = None,  # None → auto (off-TPU: interpret)
         pages_per_block: Optional[int] = None,  # decode kernel knobs;
         num_splits: Optional[int] = None,  # None → auto-tuned per shape
+        combine_mode: Optional[str] = None,  # split-K merge impl (None=auto)
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -54,6 +55,7 @@ class Engine:
         self.interpret = interpret
         self.pages_per_block = pages_per_block
         self.num_splits = num_splits
+        self.combine_mode = combine_mode
         self.dtype = dtype
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -287,7 +289,8 @@ class Engine:
     def _decode_fn(self, params, tokens, state):
         return self.model.decode_step(
             params, tokens, state, impl=self.impl, interpret=self.interpret,
-            pages_per_block=self.pages_per_block, num_splits=self.num_splits)
+            pages_per_block=self.pages_per_block, num_splits=self.num_splits,
+            combine_mode=self.combine_mode)
 
     def _decode(self) -> None:
         st = dict(self.state)
@@ -395,8 +398,15 @@ class Engine:
             raise RuntimeError("no free slot for fork")
         ps = self.cfg.page_size
         seq = src.prompt + src.output
-        full_pages = len(seq) // ps
-        need_tail = 1 if len(seq) % ps else 0
+        # Page math must follow the *cached* length (`mgr.lens`, == the
+        # parent's decode position): the last sampled token is not in the
+        # pools yet — it is the next decode input.  Sizing by len(seq)
+        # skipped the tail copy whenever len(seq) was page-aligned while
+        # the cache was still one token short of the boundary, handing the
+        # child a never-written tail page.
+        cached_len = self.mgr.lens[src.rid]
+        full_pages = cached_len // ps
+        need_tail = 1 if cached_len % ps else 0
         if need_tail + self.scheduler.headroom > len(self.mgr.free_list):
             raise RuntimeError("no pages for fork tail")
 

@@ -230,7 +230,7 @@ def test_blocked_kernel_grid_step_reduction():
     from repro.kernels.paged_attention.paged_attention import decode_grid_steps
 
     max_pages = 2048 // 16
-    ppb, ns = choose_decode_params(max_pages, 16, 128)
+    ppb, ns, _ = choose_decode_params(max_pages, 16, 128)
     baseline = decode_grid_steps(max_pages)  # one page per step
     blocked = decode_grid_steps(max_pages, pages_per_block=ppb, num_splits=ns)
     assert baseline == max_pages
@@ -240,11 +240,18 @@ def test_blocked_kernel_grid_step_reduction():
 def test_auto_knobs_clamp_to_legal_ranges():
     from repro.kernels.paged_attention.ops import choose_decode_params
 
-    ppb, ns = choose_decode_params(1, 64, 64)  # single-page cache
+    ppb, ns, cm = choose_decode_params(1, 64, 64)  # single-page cache
     assert (ppb, ns) == (1, 1)
-    ppb, ns = choose_decode_params(4, 16, 64, pages_per_block=64,
-                                   num_splits=64)
+    assert cm == "jnp"  # no split-K → no combine kernel
+    ppb, ns, cm = choose_decode_params(4, 16, 64, pages_per_block=64,
+                                       num_splits=64)
     assert ppb == 4 and ns <= 4  # clamped to the table
-    ppb, ns = choose_decode_params(256, 16, 128)
+    assert cm == ("pallas" if ns > 1 else "jnp")
+    ppb, ns, cm = choose_decode_params(256, 16, 128)
     assert ppb * 16 == 128  # MXU-aligned block
     assert 1 <= ns <= 8
+    assert cm == "pallas"  # long sequence → split-K → fused combine
+    # explicit modes pass through; junk is rejected
+    assert choose_decode_params(256, 16, 128, combine_mode="jnp")[2] == "jnp"
+    with pytest.raises(ValueError):
+        choose_decode_params(256, 16, 128, combine_mode="cuda")
