@@ -3,10 +3,18 @@
 #   test        the tier-1 gate, verbatim (pytest -x -q)
 #   test-clean  tier-1 minus KNOWN_FAIL (empty since PR 2 fixed every
 #               seed-era failure — the two targets currently coincide)
+#   test-gpu-interpret
+#               the backend-parametrized kernel + conformance suites
+#               filtered to the GPU (Triton) lowering, run through the
+#               Pallas interpreter on CPU — the same differential gate
+#               the TPU lowering gets, no GPU required (CI runs this as
+#               its own matrix leg so a GPU-path break is named in the
+#               job list, not buried in the full run)
 #   bench-fast  smoke run of the decode benches, incl. the blocked/split-K
-#               kernel sweep — catches perf-knob regressions (grid-step
-#               blowups, kernel/oracle divergence) that unit tests miss
-#   verify      test-clean + bench-fast
+#               kernel sweep over both backends — catches perf-knob
+#               regressions (grid-step blowups, kernel/oracle divergence)
+#               that unit tests miss
+#   verify      test-clean + test-gpu-interpret + bench-fast
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -16,7 +24,9 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 # here only as the hook for any future genuinely-pre-existing failure.
 KNOWN_FAIL =
 
-.PHONY: test test-clean bench-fast verify
+GPU_GATE_SUITES = tests/test_kernels_paged.py tests/test_combine_conformance.py
+
+.PHONY: test test-clean test-gpu-interpret bench-fast verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,7 +34,10 @@ test:
 test-clean:
 	$(PY) -m pytest -x -q $(KNOWN_FAIL)
 
+test-gpu-interpret:
+	$(PY) -m pytest -x -q $(GPU_GATE_SUITES) -k "gpu"
+
 bench-fast:
 	$(PY) -m benchmarks.run --fast --only fig4_decode,tbl_decode_blocks
 
-verify: test-clean bench-fast
+verify: test-clean test-gpu-interpret bench-fast

@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -23,6 +24,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list of bench names")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--backend", default=None, choices=["tpu", "gpu"],
+                    help="restrict kernel benches to one Pallas lowering "
+                         "(default: sweep both where the bench supports it)")
     args = ap.parse_args()
 
     from benchmarks import (fig3_latency, fig4_decode, fig12_memory,
@@ -46,7 +50,10 @@ def main() -> None:
         if only and name not in only:
             continue
         try:
-            table = fn(fast=args.fast)
+            kw = {}
+            if "backend" in inspect.signature(fn).parameters:
+                kw["backend"] = args.backend
+            table = fn(fast=args.fast, **kw)
             csv.extend(table.csv_lines())
         except Exception:  # noqa: BLE001
             failed.append(name)

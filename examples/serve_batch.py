@@ -39,6 +39,10 @@ def main():
                     choices=["jnp", "pallas"],
                     help="split-K merge: fused Pallas combine kernel or "
                          "jnp epilogue (default: auto — pallas iff split-K)")
+    ap.add_argument("--backend", default=None, choices=["tpu", "gpu"],
+                    help="Pallas kernel lowering: TPU scalar-prefetch "
+                         "pipeline or GPU/Triton in-kernel gather "
+                         "(default: auto from jax.default_backend())")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
@@ -51,7 +55,8 @@ def main():
                  pool_tokens=pool, impl=args.impl,
                  pages_per_block=args.pages_per_block,
                  num_splits=args.num_splits,
-                 combine_mode=args.combine_mode)
+                 combine_mode=args.combine_mode,
+                 backend=args.backend)
     reqs = wave(rng, args.requests, max_seq - args.max_new, args.max_new)
     t0 = time.perf_counter()
     eng.generate(reqs, max_steps=3000)

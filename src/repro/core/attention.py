@@ -196,6 +196,7 @@ def decode_attention(
     pages_per_block: Optional[int] = None,
     num_splits: Optional[int] = None,
     combine_mode: Optional[str] = None,
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """Paged decode attention; distributed combine over ``kv_psum_axes``.
 
@@ -213,7 +214,9 @@ def decode_attention(
     see `choose_decode_params`); the kvp path's split-K happens across the
     mesh instead, so they only apply to the local kernel.  ``combine_mode``
     selects the split-K merge implementation on *both* paths ("pallas" =
-    fused combine kernel, "jnp" = epilogue; None → auto).
+    fused combine kernel, "jnp" = epilogue; None → auto).  ``backend``
+    picks the local kernel's lowering ("tpu" scalar-prefetch pipeline or
+    "gpu" Triton in-kernel gather; None → auto from the running platform).
     """
     if not kv_psum_axes:
         return paged_attention(q, k_pages, v_pages, block_tables, lens,
@@ -221,7 +224,7 @@ def decode_attention(
                                interpret=interpret, kv_scale=kv_scale,
                                pages_per_block=pages_per_block,
                                num_splits=num_splits,
-                               combine_mode=combine_mode)
+                               combine_mode=combine_mode, backend=backend)
 
     # --- local partials ---------------------------------------------------
     m_l, l_l, o_l = _partial_decode(q, k_pages, v_pages, block_tables, lens,

@@ -138,6 +138,14 @@ def fork(state: PageState, src: jax.Array, dst: jax.Array, page_size: int
     """Prefix-share: dst aliases src's *full* pages (refcount++), and gets a
     fresh page for the partial tail.  Returns (state, tail_src_page) so the
     cache layer can copy the partial page's K/V data (copy-on-write).
+
+    Capacity guard: callers must check ``has_capacity(state, 1)`` before
+    forking a sequence with a partial tail — the vectorised `reserve` has
+    no failure channel (it silently leaves the overflowing slot unchanged
+    on a dry pool), so an unguarded fork would hand dst a NULL tail page
+    while the shared-prefix refcounts were already bumped.  The host
+    mirror (`HostPageManager.fork`) enforces the same contract by
+    returning ``False`` and rolling the bumps back.
     """
     src_len = state.seq_lens[src]
     full_pages = src_len // page_size
@@ -226,8 +234,16 @@ class HostPageManager:
                 self.free_list.append(p)
         self.lens.pop(seq_id, None)
 
-    def fork(self, src: int, dst: int) -> None:
-        """Prefix sharing: dst aliases src's full pages."""
+    def fork(self, src: int, dst: int) -> bool:
+        """Prefix sharing: dst aliases src's full pages (refcount++) and
+        reserves a fresh tail page for src's partial page.
+
+        All-or-nothing: if the pool cannot serve the tail page the shared
+        refcount bumps are rolled back and ``False`` is returned — the
+        caller must not admit the child.  (Silently keeping the bumps
+        while the child has no tail row would let the child decode into a
+        never-reserved page and desync refcounts from table occupancy.)
+        """
         src_len = self.lens[src]
         full = src_len // self.page_size
         row = self.tables[src][:full]
@@ -236,7 +252,14 @@ class HostPageManager:
         self.tables[dst] = list(row)
         self.lens[dst] = full * self.page_size
         if src_len % self.page_size:
-            self.reserve(dst, src_len)
+            if not self.reserve(dst, src_len):
+                # dry pool: undo the prefix aliasing entirely
+                for p in row:
+                    self.refcount[p] -= 1
+                del self.tables[dst]
+                del self.lens[dst]
+                return False
+        return True
 
     # -- accounting (paper's <5% overhead metric) -------------------------
     @property

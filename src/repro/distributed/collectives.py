@@ -130,6 +130,7 @@ def decode_attention_sharded(
     pages_per_block: Optional[int] = None,  # Pallas KV-block width (None=auto)
     num_splits: Optional[int] = None,  # Pallas split-K factor (None=auto)
     combine_mode: Optional[str] = None,  # split-K merge impl (None=auto)
+    backend: Optional[str] = None,  # kernel lowering: tpu | gpu (None=auto)
 ) -> jax.Array:
     """Returns (B, Hkv, G, hd)."""
     mesh = current_mesh()
@@ -144,7 +145,7 @@ def decode_attention_sharded(
             impl=impl, kv_psum_axes=kv_psum_axes, page_stride=page_stride,
             page_offset=page_offset, interpret=interpret, kv_scale=kv_scale,
             pages_per_block=pages_per_block, num_splits=num_splits,
-            combine_mode=combine_mode)
+            combine_mode=combine_mode, backend=backend)
         return o.reshape(b, nk, g, d)
 
     if mesh is None or scheme == "local":

@@ -1,9 +1,19 @@
-"""Pallas TPU kernels for the paper's compute hot-spots.
+"""Pallas kernels for the paper's compute hot-spots, per backend.
 
-paged_attention/ — fused paged decode attention (the paper's core kernel)
+paged_attention/ — fused paged decode attention (the paper's core kernel):
+                   paged_attention.py is the TPU lowering (scalar-prefetch
+                   block tables, Mosaic), paged_attention_gpu.py the
+                   Triton/GPU lowering (in-kernel block-table gathers).
 flex_attention/  — flash-style prefill kernel with FlexAttention mask/score
                    mods and BlockMask-driven tile skipping
 Each has ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle).
+
+Backend-selection contract: every kernel-facing op takes
+``backend=None`` (auto: whatever ``jax.default_backend()`` reports,
+falling back to the TPU lowering on CPU hosts) and ``interpret=None``
+(auto: interpret mode unless the process runs on the backend the kernel
+targets — so CPU CI exercises both lowerings through the Pallas
+interpreter while real TPUs/GPUs compile).
 """
 
 from __future__ import annotations
@@ -13,14 +23,36 @@ from typing import Optional
 
 import jax
 
-
-@functools.lru_cache(maxsize=1)
-def _default_interpret() -> bool:
-    # Resolved once per process: Pallas kernels compile on real TPUs and
-    # fall back to interpret mode everywhere else (CPU CI, GPU hosts).
-    return jax.default_backend() != "tpu"
+BACKENDS = ("tpu", "gpu")
 
 
-def resolve_interpret(interpret: Optional[bool]) -> bool:
-    """``None`` → auto (interpret iff not running on TPU); bools pass through."""
-    return _default_interpret() if interpret is None else bool(interpret)
+@functools.lru_cache(maxsize=None)
+def _on_platform(platform: str) -> bool:
+    # Resolved once per process: Pallas kernels compile on their target
+    # platform and fall back to interpret mode everywhere else (CPU CI,
+    # cross-platform hosts).
+    return jax.default_backend() == platform
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    """``None``/"auto" → the running platform's kernel lowering.
+
+    GPU hosts get the Triton lowering, everything else (TPU and the CPU
+    interpret-mode CI) the TPU lowering; explicit names pass through
+    (validated).
+    """
+    if backend is None or backend == "auto":
+        return "gpu" if _on_platform("gpu") else "tpu"
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS} or "
+                         f"None/'auto', got {backend!r}")
+    return backend
+
+
+def resolve_interpret(interpret: Optional[bool],
+                      backend: str = "tpu") -> bool:
+    """``None`` → auto (interpret iff not running on ``backend``'s
+    platform); bools pass through."""
+    if interpret is not None:
+        return bool(interpret)
+    return not _on_platform(backend)

@@ -1,8 +1,10 @@
 """Pallas TPU kernel: fused paged decode attention (blocked + split-K).
 
 TPU adaptation of the paper's FlexAttention-fused PagedAttention (§III-B).
-On GPU the fused kernel gathers scattered KV through ``mask_mod`` indexing;
-on TPU random gathers inside a kernel are slow, so the *grid* walks the page
+On GPU the fused kernel gathers scattered KV inside the attention loop
+(see the sibling Triton lowering, `paged_attention_gpu.py`, which shares
+this module's `decode_partition`, partial contract, and combine); on TPU
+random gathers inside a kernel are slow, so the *grid* walks the page
 list and the block table is a **scalar-prefetch operand**: the page→HBM
 translation happens in the BlockSpec ``index_map``, so the Pallas pipeline's
 DMA engine streams exactly the live pages HBM→VMEM, double-buffered, with no

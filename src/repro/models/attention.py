@@ -118,6 +118,7 @@ def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
                 pages_per_block: Optional[int] = None,
                 num_splits: Optional[int] = None,
                 combine_mode: Optional[str] = None,
+                backend: Optional[str] = None,
                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Decode one token.  x: (B, d); positions: (B,) 0-based position of the
     incoming token; tables: (B, n_kv_shards, pages_per_shard).  Appends K/V
@@ -129,7 +130,9 @@ def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
     ``pages_per_block`` / ``num_splits`` tune the Pallas decode kernel's
     KV-block width and flash-decoding split-K factor; ``combine_mode``
     picks the split-K merge implementation, local and distributed alike
-    ("pallas" = fused combine kernel, "jnp" = epilogue; None → auto).
+    ("pallas" = fused combine kernel, "jnp" = epilogue; None → auto);
+    ``backend`` selects the kernel lowering ("tpu" | "gpu"; None → auto
+    from the running platform).
 
     Returns (out, k_pages', v_pages').
     """
@@ -155,7 +158,7 @@ def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
         scheme=scheme, batch_axes=batch_axes, impl=impl, interpret=interpret,
         kv_scale=cfg.kv_scale if cfg.kv_dtype == "int8" else 0.0,
         pages_per_block=pages_per_block, num_splits=num_splits,
-        combine_mode=combine_mode)
+        combine_mode=combine_mode, backend=backend)
     return _out(p, o4.reshape(B, H, hd)), k_pages, v_pages
 
 

@@ -187,7 +187,8 @@ class EncDecModel:
                     interpret: Optional[bool] = None,
                     pages_per_block: Optional[int] = None,
                     num_splits: Optional[int] = None,
-                    combine_mode: Optional[str] = None
+                    combine_mode: Optional[str] = None,
+                    backend: Optional[str] = None
                     ) -> Tuple[jax.Array, Dict]:
         cfg = self.cfg
         B = tokens.shape[0]
@@ -206,7 +207,7 @@ class EncDecModel:
                 p["self_attn"], h, cfg, kp, vp, tables, pos, impl=impl,
                 attn_ctx=attn_ctx, interpret=interpret,
                 pages_per_block=pages_per_block, num_splits=num_splits,
-                combine_mode=combine_mode)
+                combine_mode=combine_mode, backend=backend)
             x = x + o
             h = layers.apply_norm(p["lnx"], x)
             x = x + attn.cross_attn(p["cross_attn"], h, ck, cv, cfg)

@@ -557,7 +557,8 @@ class TransformerModel:
                     interpret: Optional[bool] = None,
                     pages_per_block: Optional[int] = None,
                     num_splits: Optional[int] = None,
-                    combine_mode: Optional[str] = None
+                    combine_mode: Optional[str] = None,
+                    backend: Optional[str] = None
                     ) -> Tuple[jax.Array, Dict]:
         """tokens: (B,) → (logits (B, V), state').  Scanned over groups.
 
@@ -608,7 +609,7 @@ class TransformerModel:
                     p["attn"], h, cfg, kp, vp, tables, pos, window=w,
                     impl=impl, attn_ctx=attn_ctx, interpret=interpret,
                     pages_per_block=pages_per_block, num_splits=num_splits,
-                    combine_mode=combine_mode)
+                    combine_mode=combine_mode, backend=backend)
                 caches["kp"], caches["vp"] = kp, vp
                 x = x + o
             elif code == "C":

@@ -48,6 +48,9 @@ class Engine:
         pages_per_block: Optional[int] = None,  # decode kernel knobs;
         num_splits: Optional[int] = None,  # None → auto-tuned per shape
         combine_mode: Optional[str] = None,  # split-K merge impl (None=auto)
+        backend: Optional[str] = None,  # kernel lowering: "tpu" | "gpu"
+        # (None → auto from jax.default_backend(); CPU hosts fall back to
+        # the TPU lowering in interpret mode)
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -56,6 +59,7 @@ class Engine:
         self.pages_per_block = pages_per_block
         self.num_splits = num_splits
         self.combine_mode = combine_mode
+        self.backend = backend
         self.dtype = dtype
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -290,7 +294,7 @@ class Engine:
         return self.model.decode_step(
             params, tokens, state, impl=self.impl, interpret=self.interpret,
             pages_per_block=self.pages_per_block, num_splits=self.num_splits,
-            combine_mode=self.combine_mode)
+            combine_mode=self.combine_mode, backend=self.backend)
 
     def _decode(self) -> None:
         st = dict(self.state)
@@ -413,8 +417,14 @@ class Engine:
         child = Request(prompt=list(seq), max_new_tokens=max_new_tokens,
                         parent=src.rid, **sampling)
         child.metrics["t_arrive"] = time.perf_counter()
-        # host manager: alias full pages (refcount++), reserve fresh tail
-        self.mgr.fork(src.rid, child.rid)
+        # host manager: alias full pages (refcount++), reserve fresh tail.
+        # fork is all-or-nothing — on a dry pool it rolls the refcount
+        # bumps back and returns False, so a failed fork leaves no
+        # half-created child row behind (the headroom check above makes
+        # this unreachable in practice, but the engine must not trust it:
+        # a False here with the bumps kept would alias live pages).
+        if not self.mgr.fork(src.rid, child.rid):
+            raise RuntimeError("no pages for fork tail")
         # device: copy the parent's partial tail page into the child's
         if need_tail:
             src_tail = self.mgr.tables[src.rid][full_pages]
@@ -450,6 +460,12 @@ class Engine:
         n_attn = getattr(self.model, "n_attn_layers", 0)
         item = jnp.dtype(self.dtype).itemsize
         if self.paged:
+            # pools are int8 under kv_dtype="int8" (see _init_state) — the
+            # accounting must use the *pool* dtype, not the activation
+            # dtype, or pool_bytes/reserved_bytes overstate 4× and skew
+            # the paper's <5 % overhead metric
+            pool_dt = jnp.int8 if cfg.kv_dtype == "int8" else self.dtype
+            item = jnp.dtype(pool_dt).itemsize
             cache_bytes = (2 * n_attn * self.num_pages * cfg.page_size
                            * Hkv * hd * item)
             reserved = self.mgr.bytes_reserved(Hkv, hd, n_attn, item)

@@ -72,21 +72,32 @@ class Scheduler:
         """Grow every running sequence by one token; preempt on exhaustion.
 
         Returns the requests preempted this step (their slots are now free).
+
+        Preemption safety: victims picked mid-loop may sit *later* in the
+        iteration order, so every request is re-checked against the live
+        ``running`` set before it is extended.  (The former code iterated
+        a snapshot list that preemption could not edit — the rebinding
+        ``order = [...]`` never touched the active ``for`` — so
+        ``mgr.extend`` ran on rids whose pages were just freed,
+        re-reserving a page under a PREEMPTED rid; the stale table row
+        then survived ``tables.setdefault`` on re-admission and aliased
+        pages concurrently handed to other sequences — silent KV
+        corruption.)
         """
         victims: List[Request] = []
-        # youngest first when picking victims
-        order = sorted(self.running.values(), key=lambda r: r.rid)
-        for req in order:
+        # oldest first when extending, youngest first when picking victims
+        for req in sorted(self.running.values(), key=lambda r: r.rid):
+            if req.status is not Status.RUNNING or req.slot not in self.running:
+                continue  # preempted by an earlier extend — pages are freed
             while not self.mgr.extend(req.rid, 1):
-                cand = [r for r in order
-                        if r.status == Status.RUNNING and r is not req]
+                cand = [r for r in self.running.values()
+                        if r.status is Status.RUNNING and r is not req]
                 if not cand:
                     raise RuntimeError(
                         "page pool too small for a single sequence")
                 victim = max(cand, key=lambda r: r.rid)
                 self._preempt(victim)
                 victims.append(victim)
-                order = [r for r in order if r is not victim]
         return victims
 
     def _preempt(self, req: Request) -> None:

@@ -7,6 +7,12 @@ partitions whose last split is entirely ragged padding blocks — and the
 end-to-end pallas-combined decode must match the split-K partials oracle
 (`ref.paged_attention_partials_ref` + ref combine).
 
+The end-to-end gates run per *backend*: the TPU decode kernel and the
+GPU/Triton decode kernel feed the identical combine (the combine kernel
+and both oracles are backend-independent and unchanged), so one
+conformance bar covers both lowerings — interpret mode off the target
+hardware, compiled on real TPUs/GPUs.
+
 Property-based tests (hypothesis; `tests/_hypothesis_stub.py` when the
 real package is absent) pin the combine *algebra*: permutation
 invariance over splits, associativity of pairwise merges, all-dead-split
@@ -29,7 +35,7 @@ from repro.kernels.paged_attention.ref import (
     combine_partials_ref, paged_attention_partials_ref)
 
 from conftest import assert_close
-from test_kernels_paged import make_case
+from test_kernels_paged import BACKENDS, make_case
 
 TOL = 1e-5  # acceptance bar: bit-for-bit within tolerance
 
@@ -102,31 +108,37 @@ def test_pallas_combine_matches_ref(rng, ppb, ns, variant):
     assert float(jnp.max(jnp.abs(out - ref))) <= TOL
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("ppb,ns", [(2, 3), (4, 2)])
 @pytest.mark.parametrize("variant", VARIANTS)
-def test_end_to_end_pallas_combine_matches_oracle(rng, ppb, ns, variant):
+def test_end_to_end_pallas_combine_matches_oracle(rng, ppb, ns, variant,
+                                                  backend):
     """Full two-kernel pipeline (decode partials + fused combine) vs the
-    split-K oracle pair, end to end."""
+    split-K oracle pair, end to end — per decode backend, one oracle."""
     q, kp, vp, tables, lens, kw = _conformance_case(rng, variant)
     out = paged_attention(q, kp, vp, tables, lens, impl="pallas",
                           interpret=True, pages_per_block=ppb,
-                          num_splits=ns, combine_mode="pallas", **kw)
+                          num_splits=ns, combine_mode="pallas",
+                          backend=backend, **kw)
     m, l, acc = paged_attention_partials_ref(
         q, kp, vp, tables, lens, num_splits=ns, pages_per_block=ppb, **kw)
     ref = combine_partials_ref(m, l, acc)
     assert float(jnp.max(jnp.abs(out - ref))) <= TOL
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("ppb,ns", [(1, 2), (2, 4)])
-def test_combine_modes_agree_end_to_end(rng, ppb, ns):
+def test_combine_modes_agree_end_to_end(rng, ppb, ns, backend):
     """jnp-epilogue and fused-kernel decodes are interchangeable."""
     q, kp, vp, tables, lens, _ = _conformance_case(rng, "gqa")
     o_jnp = paged_attention(q, kp, vp, tables, lens, impl="pallas",
                             interpret=True, pages_per_block=ppb,
-                            num_splits=ns, combine_mode="jnp")
+                            num_splits=ns, combine_mode="jnp",
+                            backend=backend)
     o_pal = paged_attention(q, kp, vp, tables, lens, impl="pallas",
                             interpret=True, pages_per_block=ppb,
-                            num_splits=ns, combine_mode="pallas")
+                            num_splits=ns, combine_mode="pallas",
+                            backend=backend)
     assert float(jnp.max(jnp.abs(o_jnp - o_pal))) <= TOL
 
 

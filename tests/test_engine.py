@@ -83,6 +83,31 @@ def test_memory_overhead_objective():
     assert base.memory_report()["overhead_frac"] > 0.5
 
 
+def test_memory_report_uses_pool_dtype():
+    """int8 pools must be accounted at their own itemsize: sizing them by
+    the f32 activation dtype overstated pool_bytes/reserved_bytes 4× and
+    skewed the paper's <5% overhead metric."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    cfg = get_smoke("llama2-7b")
+    cfg8 = dataclasses.replace(cfg, kv_dtype="int8")
+    eng = Engine(cfg, max_slots=2, max_seq_len=64)
+    eng8 = Engine(cfg8, max_slots=2, max_seq_len=64)
+    assert eng8.state["k_pages"].dtype == jnp.int8
+    for e in (eng, eng8):
+        e.add_request(Request(prompt=[1] * 20, max_new_tokens=4))
+        e.step()
+    rep, rep8 = eng.memory_report(), eng8.memory_report()
+    ratio = jnp.dtype(eng.dtype).itemsize  # f32 pools vs 1-byte int8 pools
+    assert rep8["pool_bytes"] * ratio == rep["pool_bytes"]
+    assert rep8["reserved_bytes"] * ratio == rep["reserved_bytes"]
+    assert rep8["theoretical_min_bytes"] * ratio == rep["theoretical_min_bytes"]
+    # the ratio metric is itemsize-invariant once accounting is consistent
+    assert abs(rep8["overhead_frac"] - rep["overhead_frac"]) < 1e-9
+
+
 def test_ttft_and_throughput_metrics():
     eng = make_engine()
     reqs = [Request(prompt=[1, 2, 3], max_new_tokens=5)]

@@ -1,7 +1,13 @@
-"""Pallas paged-decode kernel vs the pure-jnp oracle (ref.py).
+"""Pallas paged-decode kernels vs the pure-jnp oracle (ref.py).
 
 Sweeps shapes / dtypes / GQA ratios / windows / softcap, per the harness
 contract: every kernel is validated in interpret mode against ref.py.
+The numeric sweeps run per *backend* — the TPU lowering (scalar-prefetch
+BlockSpec pipeline) and the GPU/Triton lowering (in-kernel block-table
+gathers) are gated against the identical oracles, so neither backend can
+drift from the other's semantics.  Off the target hardware both run
+through the Pallas interpreter (``interpret=True``); on real TPUs/GPUs
+the same tests compile.
 """
 
 import jax
@@ -14,6 +20,19 @@ from repro.kernels.paged_attention.ops import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 from conftest import assert_close
+
+BACKENDS = ["tpu", "gpu"]
+
+
+def partials_fn(backend):
+    """The backend's split-K partials entry point (same contract both)."""
+    if backend == "gpu":
+        from repro.kernels.paged_attention.paged_attention_gpu import (
+            paged_attention_partials_gpu)
+        return paged_attention_partials_gpu
+    from repro.kernels.paged_attention.paged_attention import (
+        paged_attention_partials)
+    return paged_attention_partials
 
 
 def make_case(rng, B, H, Hkv, D, page, max_pages, lens, dtype=jnp.float32,
@@ -46,22 +65,24 @@ SWEEP = [
 ]
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("case", SWEEP, ids=[str(i) for i in range(len(SWEEP))])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_kernel_matches_ref(rng, case, dtype):
+def test_kernel_matches_ref(rng, case, dtype, backend):
     B, H, Hkv, D, page, mp, lens = case
     q, kp, vp, tables, lens = make_case(rng, B, H, Hkv, D, page, mp, lens,
                                         dtype)
     ref = paged_attention_ref(q, kp, vp, tables, lens)
     out = paged_attention(q, kp, vp, tables, lens, impl="pallas",
-                          interpret=True)
+                          interpret=True, backend=backend)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     assert_close(out, ref, rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("softcap", [0.0, 30.0])
 @pytest.mark.parametrize("window", [0, 12, 40])
-def test_kernel_window_softcap(rng, window, softcap):
+def test_kernel_window_softcap(rng, window, softcap, backend):
     B, H, Hkv, D, page = 2, 8, 4, 32, 8
     lens = [61, 23]
     if window > 0:
@@ -80,11 +101,13 @@ def test_kernel_window_softcap(rng, window, softcap):
     ref = paged_attention_ref(q, kp, vp, tables, lens, window=window,
                               softcap=softcap)
     out = paged_attention(q, kp, vp, tables, lens, window=window,
-                          softcap=softcap, impl="pallas", interpret=True)
+                          softcap=softcap, impl="pallas", interpret=True,
+                          backend=backend)
     assert_close(out, ref)
 
 
-def test_kernel_equals_contiguous_attention(rng):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kernel_equals_contiguous_attention(rng, backend):
     """The paper's C1: paged == contiguous attention, end to end."""
     B, H, Hkv, D, page, mp = 2, 8, 4, 32, 8, 6
     lens = [41, 29]
@@ -94,7 +117,7 @@ def test_kernel_equals_contiguous_attention(rng):
     from repro.core.attention import decode_attention_contiguous
     ref = decode_attention_contiguous(q, k, v, lens_a)
     out = paged_attention(q, kp, vp, tables, lens_a, impl="pallas",
-                          interpret=True)
+                          interpret=True, backend=backend)
     assert_close(out, ref, rtol=1e-4, atol=1e-4)
 
 
@@ -107,7 +130,8 @@ def test_blockspec_mxu_alignment():
         assert head_dim % 128 == 0  # lane
 
 
-def test_int8_kv_kernel_matches_ref(rng):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_int8_kv_kernel_matches_ref(rng, backend):
     """Beyond-paper int8 KV pages: kernel dequant == ref dequant, and both
     approximate the bf16 result within quantization error."""
     B, H, Hkv, D, page, mp = 2, 8, 4, 32, 8, 4
@@ -117,7 +141,7 @@ def test_int8_kv_kernel_matches_ref(rng):
     vp8 = jnp.clip(jnp.round(vp / scale), -127, 127).astype(jnp.int8)
     ref8 = paged_attention_ref(q, kp8, vp8, tables, lens, kv_scale=scale)
     out8 = paged_attention(q, kp8, vp8, tables, lens, impl="pallas",
-                           interpret=True, kv_scale=scale)
+                           interpret=True, kv_scale=scale, backend=backend)
     assert_close(out8, ref8, rtol=1e-4, atol=1e-4)
     exact = paged_attention_ref(q, kp, vp, tables, lens)
     err = float(jnp.max(jnp.abs(ref8 - exact)))
@@ -166,23 +190,25 @@ def _variant_case(rng, variant):
     return q, kp, vp, tables, lens, {}
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("ppb,ns", BLOCK_SPLIT_GRID)
 @pytest.mark.parametrize("variant", VARIANTS)
-def test_blocked_splitk_matches_ref(rng, ppb, ns, variant):
+def test_blocked_splitk_matches_ref(rng, ppb, ns, variant, backend):
     q, kp, vp, tables, lens, kw = _variant_case(rng, variant)
     ref = paged_attention_ref(q, kp, vp, tables, lens, **kw)
     out = paged_attention(q, kp, vp, tables, lens, impl="pallas",
                           interpret=True, pages_per_block=ppb,
-                          num_splits=ns, **kw)
+                          num_splits=ns, backend=backend, **kw)
     # acceptance bar: split-K path agrees with ref.py to <= 1e-5 max abs
     assert float(jnp.max(jnp.abs(out - ref))) <= 1e-5
 
 
-def test_splitk_partials_match_ref(rng):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_splitk_partials_match_ref(rng, backend):
     """Kernel split-K partials == the ref.py partial-softmax oracle, and the
-    combine reproduces full attention (incl. empty partitions)."""
-    from repro.kernels.paged_attention.paged_attention import (
-        combine_partials, paged_attention_partials)
+    combine reproduces full attention (incl. empty partitions) — both
+    backends emit the identical (m, l, acc) contract."""
+    from repro.kernels.paged_attention.paged_attention import combine_partials
     from repro.kernels.paged_attention.ref import (
         combine_partials_ref, paged_attention_partials_ref)
 
@@ -190,7 +216,7 @@ def test_splitk_partials_match_ref(rng):
     ppb, ns = 2, 3
     q, kp, vp, tables, lens = make_case(rng, B, H, Hkv, D, page, mp, [65, 9])
     scale = 1.0 / np.sqrt(D)
-    m, l, acc = paged_attention_partials(
+    m, l, acc = partials_fn(backend)(
         q.reshape(B, Hkv, H // Hkv, D), kp, vp, tables, lens, scale=scale,
         interpret=True, pages_per_block=ppb, num_splits=ns)
     mr, lr, accr = paged_attention_partials_ref(
@@ -205,15 +231,15 @@ def test_splitk_partials_match_ref(rng):
                  rtol=1e-5, atol=1e-5)
 
 
-def test_empty_split_partition_is_neutral(rng):
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_split_partition_is_neutral(rng, backend):
     """A split whose whole page range is past len must emit (NEG_INF, 0, 0)
     and change nothing in the combine."""
-    from repro.kernels.paged_attention.paged_attention import (
-        NEG_INF, paged_attention_partials)
+    from repro.kernels.paged_attention.paged_attention import NEG_INF
 
     B, H, Hkv, D, page, mp = 1, 4, 2, 16, 4, 8
     q, kp, vp, tables, lens = make_case(rng, B, H, Hkv, D, page, mp, [5])
-    m, l, acc = paged_attention_partials(
+    m, l, acc = partials_fn(backend)(
         q.reshape(B, Hkv, H // Hkv, D), kp, vp, tables, lens,
         scale=1.0 / np.sqrt(D), interpret=True,
         pages_per_block=1, num_splits=4)
@@ -255,3 +281,55 @@ def test_auto_knobs_clamp_to_legal_ranges():
     assert choose_decode_params(256, 16, 128, combine_mode="jnp")[2] == "jnp"
     with pytest.raises(ValueError):
         choose_decode_params(256, 16, 128, combine_mode="cuda")
+
+
+def test_gpu_auto_knobs_warp_shaped():
+    """GPU heuristics target warp-width blocks (64 KV tokens, not the
+    MXU's 128) and split earlier/wider for SM occupancy."""
+    from repro.kernels.paged_attention.ops import choose_decode_params
+
+    ppb_t, ns_t, _ = choose_decode_params(256, 16, 128, backend="tpu")
+    ppb_g, ns_g, cm_g = choose_decode_params(256, 16, 128, backend="gpu")
+    assert ppb_t * 16 == 128  # MXU-width block
+    assert ppb_g * 16 == 64  # warp-width block
+    assert ns_g >= ns_t  # GPU splits at least as wide
+    assert ns_g <= 16
+    # auto combine on GPU is the jnp epilogue even under split-K: the
+    # fused combine kernel is a TPU lowering and would run through the
+    # interpreter on a real GPU's hot path; explicit "pallas" still works
+    assert cm_g == "jnp"
+    assert choose_decode_params(256, 16, 128, combine_mode="pallas",
+                                backend="gpu")[2] == "pallas"
+    # short sequences: single split, no combine kernel — both backends
+    assert choose_decode_params(1, 64, 64, backend="gpu") == (1, 1, "jnp")
+    # explicit knobs pass through clamping identically on both backends
+    assert (choose_decode_params(16, 16, 64, 2, 4, backend="gpu")[:2]
+            == choose_decode_params(16, 16, 64, 2, 4, backend="tpu")[:2])
+
+
+def test_backend_resolution():
+    """backend=None auto-resolves from the platform (TPU lowering off-GPU);
+    explicit names pass through and junk is rejected."""
+    from repro.kernels import resolve_backend
+
+    assert resolve_backend("tpu") == "tpu"
+    assert resolve_backend("gpu") == "gpu"
+    auto = resolve_backend(None)
+    assert auto == ("gpu" if jax.default_backend() == "gpu" else "tpu")
+    assert resolve_backend("auto") == auto
+    with pytest.raises(ValueError):
+        resolve_backend("cuda")
+
+
+def test_backends_agree_bitwise_partition(rng):
+    """Both lowerings share decode_partition, so their outputs agree with
+    each other (not just with the oracle) across knob points."""
+    q, kp, vp, tables, lens = make_case(rng, 2, 8, 4, 32, 8, 9, [65, 9])
+    for ppb, ns in [(1, 1), (2, 3), (4, 2)]:
+        o_tpu = paged_attention(q, kp, vp, tables, lens, impl="pallas",
+                                interpret=True, pages_per_block=ppb,
+                                num_splits=ns, backend="tpu")
+        o_gpu = paged_attention(q, kp, vp, tables, lens, impl="pallas",
+                                interpret=True, pages_per_block=ppb,
+                                num_splits=ns, backend="gpu")
+        assert float(jnp.max(jnp.abs(o_tpu - o_gpu))) <= 1e-5

@@ -1,0 +1,244 @@
+"""Preemption/fork stress test: allocator invariants under an
+oversubscribed pool.
+
+PagedAttention's serving half is only correct if the scheduler that frees
+pages "instantly" under memory pressure and the allocator that hands them
+out agree at every step.  Two historical bugs broke that agreement:
+
+  * `Scheduler.extend_for_decode` iterated a *snapshot* list while
+    preempting — the rebinding ``order = [...]`` never affected the
+    active ``for`` loop — so ``mgr.extend`` ran on victims whose pages
+    were just freed, re-reserving pages under PREEMPTED rids; the stale
+    table row survived ``tables.setdefault`` on re-admission and aliased
+    pages concurrently allocated to other sequences.
+  * `HostPageManager.fork` ignored the ``bool`` from ``reserve`` — on a
+    dry pool the child kept the shared-prefix refcount bumps but got no
+    tail page (and pre-fix returned ``None``, so callers could not even
+    tell).
+
+This suite fails on the pre-fix scheduler/manager and gates the fixed
+ones: every step of an interleaved admit/extend/preempt/fork/finish
+schedule must preserve the allocator invariants below.
+"""
+
+import random
+
+import pytest
+
+from repro.core.paging import HostPageManager
+from repro.serving.request import Request, Status
+from repro.serving.scheduler import Scheduler
+
+
+def check_allocator_invariants(mgr: HostPageManager, sched: Scheduler):
+    """The host-allocator ↔ scheduler agreement, asserted exhaustively."""
+    live_rids = {r.rid for r in sched.running.values()}
+
+    # 1. pages are only ever held under RUNNING rids — a table row under a
+    #    preempted/finished rid is a ghost reservation (the extend-after-
+    #    preempt bug's signature) that admission control cannot see.
+    assert set(mgr.tables) == live_rids, (
+        f"table rows exist for non-running rids: "
+        f"{set(mgr.tables) - live_rids}")
+    assert set(mgr.lens) == live_rids
+
+    # 2. refcounts match table occurrences exactly.
+    occ = {}
+    for row in mgr.tables.values():
+        for p in row:
+            occ[p] = occ.get(p, 0) + 1
+    for p in range(mgr.num_pages):
+        assert mgr.refcount[p] == occ.get(p, 0), (
+            f"page {p}: refcount {mgr.refcount[p]} != "
+            f"{occ.get(p, 0)} table occurrences")
+
+    # 3. no physical page referenced by two live block tables unless its
+    #    refcount says so (prefix sharing) — refcount 1 means sole owner.
+    for p, n in occ.items():
+        if n >= 2:
+            assert mgr.refcount[p] >= 2, f"page {p} aliased at refcount 1"
+
+    # 4. free-list conservation: every page is free xor referenced, no
+    #    duplicates, and the used/free split covers the whole pool.
+    free = set(mgr.free_list)
+    assert len(free) == len(mgr.free_list), "duplicate pages on free list"
+    assert not (free & set(occ)), "page simultaneously free and referenced"
+    assert mgr.used_pages + len(mgr.free_list) == mgr.num_pages
+    assert len(occ) + len(mgr.free_list) == mgr.num_pages
+
+    # 5. table rows cover exactly ceil(len / page_size) pages.
+    for rid, row in mgr.tables.items():
+        want = -(-mgr.lens[rid] // mgr.page_size)
+        assert len(row) == want, (
+            f"rid {rid}: {len(row)} pages for len {mgr.lens[rid]}")
+
+
+def _drain_running_decode_token(sched: Scheduler):
+    """Mirror the engine: every surviving RUNNING request gains the token
+    the extend reserved space for."""
+    for r in sched.running.values():
+        r.output.append(0)
+
+
+def test_preempted_victim_is_never_extended():
+    """Targeted regression for the extend-after-preempt bug: the victim
+    preempted mid-loop sits *later* in the rid-sorted iteration order, so
+    the buggy loop reached it after its pages were freed and re-reserved
+    a page under the PREEMPTED rid."""
+    mgr = HostPageManager(num_pages=6, page_size=4)
+    sched = Scheduler(mgr, max_slots=2, max_seq_len=64, headroom_pages=1)
+    r0 = Request(prompt=[1] * 8, max_new_tokens=32)
+    r1 = Request(prompt=[1] * 8, max_new_tokens=32)
+    sched.add(r0)
+    sched.add(r1)
+    assert len(sched.admit()) == 2
+
+    victims = []
+    for _ in range(8):
+        victims += sched.extend_for_decode()
+        _drain_running_decode_token(sched)
+        check_allocator_invariants(mgr, sched)
+        if victims:
+            break
+    assert victims == [r1], "youngest running request must be the victim"
+    assert r1.status is Status.PREEMPTED
+    # the freed rid must hold nothing: no table row, no len, no pages —
+    # pre-fix, mgr.tables[r1.rid] re-appeared with one freshly-popped page
+    assert r1.rid not in mgr.tables
+    assert r1.rid not in mgr.lens
+    # and the survivor keeps decoding with a consistent allocator
+    assert r0.rid in mgr.tables
+    check_allocator_invariants(mgr, sched)
+
+
+def test_fork_on_dry_pool_rolls_back():
+    """`HostPageManager.fork` must be all-or-nothing: a fork whose tail
+    page cannot be served returns False and leaves no trace (pre-fix it
+    returned None, kept the refcount bumps, and left a tail-less child
+    row behind)."""
+    mgr = HostPageManager(num_pages=3, page_size=4)
+    assert mgr.reserve(0, 9)  # 3 pages: 2 full + partial tail; pool now dry
+    before_ref = list(mgr.refcount)
+    ok = mgr.fork(0, 1)
+    assert ok is False
+    assert 1 not in mgr.tables and 1 not in mgr.lens
+    assert mgr.refcount == before_ref, "failed fork must roll back refcounts"
+    assert len(mgr.free_list) == 0
+
+    # page-aligned src (no tail needed) forks fine even on a dry pool
+    mgr2 = HostPageManager(num_pages=2, page_size=4)
+    assert mgr2.reserve(0, 8)
+    assert mgr2.fork(0, 1) is True
+    assert mgr2.tables[1] == mgr2.tables[0]
+    assert all(mgr2.refcount[p] == 2 for p in mgr2.tables[0])
+
+
+def test_preempt_fork_stress_invariants():
+    """The acceptance stress: oversubscribed pool, N steps of interleaved
+    admits / decode-extends (with preemption) / forks / finishes, with the
+    full allocator-invariant check after every step."""
+    rnd = random.Random(0xC0FFEE)
+    mgr = HostPageManager(num_pages=24, page_size=4)
+    sched = Scheduler(mgr, max_slots=4, max_seq_len=256, headroom_pages=1)
+
+    all_reqs = []
+
+    def submit(n_tokens):
+        r = Request(prompt=[1] * n_tokens, max_new_tokens=rnd.randint(4, 24))
+        all_reqs.append(r)
+        sched.add(r)
+
+    for _ in range(3):
+        submit(rnd.randint(4, 24))
+
+    preempted_total = 0
+    forked_total = 0
+    fork_failed_total = 0
+    for step in range(200):
+        # keep pressure on: top the queue up so admission always has work
+        if len(sched.waiting) < 2 and rnd.random() < 0.5:
+            submit(rnd.randint(4, 28))
+
+        sched.admit()
+        check_allocator_invariants(mgr, sched)
+
+        if sched.running:
+            preempted_total += len(sched.extend_for_decode())
+            _drain_running_decode_token(sched)
+            check_allocator_invariants(mgr, sched)
+
+        # fork: child aliases a running parent's full pages (refcount++).
+        # On a dry pool the fork must fail atomically — either way the
+        # invariants hold.  The child enters the running batch directly
+        # (no re-prefill), mirroring Engine.fork_request.
+        free_slots = sched.free_slots()
+        if sched.running and free_slots and rnd.random() < 0.35:
+            parent = rnd.choice(list(sched.running.values()))
+            child = Request(prompt=list(parent.prompt) + list(parent.output),
+                            max_new_tokens=rnd.randint(2, 8))
+            all_reqs.append(child)
+            ok = mgr.fork(parent.rid, child.rid)
+            assert ok in (True, False), "fork must report success"
+            if ok:
+                child.status = Status.RUNNING
+                child.slot = free_slots[0]
+                sched.running[child.slot] = child
+                forked_total += 1
+            else:
+                fork_failed_total += 1
+                assert child.rid not in mgr.tables
+            check_allocator_invariants(mgr, sched)
+
+        # finish requests that hit their budget (frees pages → churn)
+        for r in list(sched.running.values()):
+            if len(r.output) >= r.max_new_tokens:
+                sched.finish(r)
+        check_allocator_invariants(mgr, sched)
+
+    # the schedule must actually have exercised the hard paths
+    assert preempted_total >= 3, "stress never triggered preemption"
+    assert forked_total >= 3, "stress never forked"
+    assert sched.preempted == preempted_total
+
+    # drain: let everything finish; the pool must come back whole
+    for _ in range(600):
+        if not sched.has_work:
+            break
+        sched.admit()
+        if sched.running:
+            sched.extend_for_decode()
+            _drain_running_decode_token(sched)
+        for r in list(sched.running.values()):
+            if len(r.output) >= r.max_new_tokens:
+                sched.finish(r)
+        check_allocator_invariants(mgr, sched)
+    assert not sched.has_work
+    assert len(mgr.free_list) == mgr.num_pages
+    assert all(c == 0 for c in mgr.refcount)
+
+
+def test_cascaded_preemption_keeps_invariants():
+    """Several sequences hitting page boundaries in the same step force
+    multiple victims in one extend pass; each later extend must see the
+    post-preemption allocator, never a stale snapshot."""
+    mgr = HostPageManager(num_pages=9, page_size=4)
+    sched = Scheduler(mgr, max_slots=3, max_seq_len=128, headroom_pages=1)
+    reqs = [Request(prompt=[1] * 8, max_new_tokens=64) for _ in range(3)]
+    for r in reqs:
+        sched.add(r)
+    assert len(sched.admit()) == 3  # 6 pages used, 3 free
+
+    victims = []
+    for _ in range(10):
+        victims += sched.extend_for_decode()
+        _drain_running_decode_token(sched)
+        check_allocator_invariants(mgr, sched)
+        if len(victims) >= 2:
+            break
+    assert len(victims) >= 2, "pool pressure must force multiple victims"
+    for v in victims:
+        assert v.status is Status.PREEMPTED
+        assert v.rid not in mgr.tables and v.rid not in mgr.lens
+    # exactly one survivor decodes on
+    assert len(sched.running) == 1
+    check_allocator_invariants(mgr, sched)
