@@ -26,7 +26,7 @@ KNOWN_FAIL =
 
 GPU_GATE_SUITES = tests/test_kernels_paged.py tests/test_combine_conformance.py
 
-.PHONY: test test-clean test-gpu-interpret bench-fast verify
+.PHONY: test test-clean test-gpu-interpret test-chunked bench-fast verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -37,7 +37,14 @@ test-clean:
 test-gpu-interpret:
 	$(PY) -m pytest -x -q $(GPU_GATE_SUITES) -k "gpu"
 
+# the chunked-prefill equivalence gate (ISSUE 5): prefix-aware prefill
+# kernels vs oracle (both backends) + chunked == monolithic logits/outputs
+# across chunk sizes, preemption, and mid-prefill stalls.  Part of the
+# tier-1 run too; kept as its own target so CI names a chunking break.
+test-chunked:
+	$(PY) -m pytest -x -q tests/test_chunked_prefill.py
+
 bench-fast:
-	$(PY) -m benchmarks.run --fast --only fig4_decode,tbl_decode_blocks
+	$(PY) -m benchmarks.run --fast --only fig4_decode,tbl_decode_blocks,mixed_batch
 
 verify: test-clean test-gpu-interpret bench-fast

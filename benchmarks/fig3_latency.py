@@ -22,15 +22,22 @@ from repro.models.api import build_model
 SEQ_LENS = [128, 256, 512, 1024, 2048]
 
 
-def run(fast: bool = False):
+def run(fast: bool = False, backend: str = None):
     cfg = get_smoke("llama2-7b")
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     seq_lens = SEQ_LENS[:3] if fast else SEQ_LENS
     t = Table("fig3_latency",
-              ["seq_len", "cached_us_tok", "uncached_us_tok", "ratio"])
+              ["seq_len", "backend", "cached_us_tok", "uncached_us_tok",
+               "ratio"])
+    bk = backend or "auto"
 
-    decode = jax.jit(lambda p, tok, st: model.decode_step(p, tok, st))
+    # --backend picks the cached path's decode-kernel lowering (the
+    # oracle impl ignores it; impl="pallas" exercises it end-to-end)
+    impl = "ref" if backend is None else "pallas"
+    decode = jax.jit(lambda p, tok, st: model.decode_step(
+        p, tok, st, impl=impl, backend=backend,
+        interpret=True if backend is not None else None))
     forward = jax.jit(lambda p, toks: model.forward(p, toks))
 
     rows = []
@@ -52,14 +59,14 @@ def run(fast: bool = False):
         # uncached: regenerate the whole prefix every new token
         t_uncached = timeit(forward, params, toks)
         rows.append((S, t_cached, t_uncached))
-        t.add(S, round(t_cached * 1e6, 1), round(t_uncached * 1e6, 1),
+        t.add(S, bk, round(t_cached * 1e6, 1), round(t_uncached * 1e6, 1),
               round(t_uncached / t_cached, 1))
 
     # C2 scaling check: cached grows sub-linearly vs uncached growth
     c0, cN = rows[0][1], rows[-1][1]
     u0, uN = rows[0][2], rows[-1][2]
     span = rows[-1][0] / rows[0][0]
-    t.add("growth_x", round(cN / c0, 2), round(uN / u0, 2),
+    t.add("growth_x", bk, round(cN / c0, 2), round(uN / u0, 2),
           f"context x{span:.0f}")
     t.show()
     return t

@@ -30,32 +30,36 @@ SEQ_LENS = [128, 256, 512, 1024, 2048]
 PAGE_SIZE = 16  # the paper's decode page size (fixed for comparability)
 
 
-def run(fast: bool = False):
+def run(fast: bool = False, backend: str = None):
     cfg = get_smoke("llama2-7b")
     H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     ps = PAGE_SIZE
     B = 4
     seq_lens = SEQ_LENS[:3] if fast else SEQ_LENS
     t = Table("fig4_decode",
-              ["seq_len", "paged_us", "contiguous_us", "paged/contig",
-               "pallas_us", "ppb", "splits", "grid_blk", "grid_1p", "grid_x"])
+              ["seq_len", "backend", "paged_us", "contiguous_us",
+               "paged/contig", "pallas_us", "ppb", "splits", "grid_blk",
+               "grid_1p", "grid_x"])
 
     paged = jax.jit(lambda q, kp, vp, bt, l: decode_attention(
         q, kp, vp, bt, l, impl="ref"))
+    # the kernel axis honours --backend (TPU scalar-prefetch pipeline or
+    # GPU/Triton in-kernel gather; None → auto from the platform)
     pallas = jax.jit(lambda q, kp, vp, bt, l: decode_attention(
-        q, kp, vp, bt, l, impl="pallas", interpret=True))
+        q, kp, vp, bt, l, impl="pallas", interpret=True, backend=backend))
     contig = jax.jit(decode_attention_contiguous)
+    bk = backend or "auto"
 
     for S in SEQ_LENS:
         mp = -(-S // ps)
         # grid accounting is free — report it for every seq_len, even the
         # ones --fast skips timing for
-        ppb, ns, _ = choose_decode_params(mp, ps, D)
+        ppb, ns, _ = choose_decode_params(mp, ps, D, backend=backend)
         g1 = decode_grid_steps(mp)
         gb = decode_grid_steps(mp, pages_per_block=ppb, num_splits=ns)
         gx = round(g1 / gb, 2)
         if S not in seq_lens:
-            t.add(S, "-", "-", "-", "-", ppb, ns, gb, g1, gx)
+            t.add(S, bk, "-", "-", "-", "-", ppb, ns, gb, g1, gx)
             continue
 
         ks = jax.random.split(jax.random.PRNGKey(S), 5)
@@ -71,7 +75,7 @@ def run(fast: bool = False):
         tc = timeit(contig, q, kc, vc, lens)
         # interpret-mode kernel steps run in python — keep iters low
         tk = timeit(pallas, q, kp, vp, bt, lens, warmup=1, iters=2)
-        t.add(S, round(tp * 1e6, 1), round(tc * 1e6, 1), round(tp / tc, 2),
-              round(tk * 1e6, 1), ppb, ns, gb, g1, gx)
+        t.add(S, bk, round(tp * 1e6, 1), round(tc * 1e6, 1),
+              round(tp / tc, 2), round(tk * 1e6, 1), ppb, ns, gb, g1, gx)
     t.show()
     return t

@@ -1,8 +1,19 @@
 """Paper §IV scenario (b): mixed-length batch throughput under a fixed
-memory budget — the system-level payoff of paging.
+memory budget — the system-level payoff of paging — plus the chunked-
+prefill decode-stall sweep (ISSUE 5).
 
-Same pool bytes for both engines; the paged engine admits more concurrent
-requests (no max-length reservation), so aggregate tokens/s is higher.
+Part 1 (rows ``paged`` / ``contiguous``): same pool bytes for both
+engines; the paged engine admits more concurrent requests (no max-length
+reservation), so aggregate tokens/s is higher.
+
+Part 2 (rows ``chunk=...``): a long prompt arrives while short requests
+are decoding.  With monolithic prefill (``chunk=mono``) the whole prompt
+runs in one forward pass and every running decode stalls behind it — the
+worst decode step's wall time scales with the prompt length.  With
+``prefill_chunk=c`` the prompt caches ``c`` tokens per engine step
+interleaved with decode, so per-step decode latency is bounded by the
+chunk, not the prompt: ``stall_p99_ms`` / ``stall_max_ms`` collapse and
+stay ~flat as the chunk shrinks.
 """
 
 from __future__ import annotations
@@ -15,6 +26,7 @@ import numpy as np
 from benchmarks.common import Table
 from repro.configs import get_smoke
 from repro.serving import Engine, Request
+from repro.serving.request import Status
 
 
 def run_engine(paged: bool, pool_tokens: int, params=None, cfg=None):
@@ -40,17 +52,75 @@ def run_engine(paged: bool, pool_tokens: int, params=None, cfg=None):
     return eng, toks / wall, wall
 
 
+def decode_stalls(params, cfg, prefill_chunk, long_prompt=96, fast=False):
+    """Per-step decode latency while a long prompt enters a busy batch.
+
+    Returns (p50_ms, p99_ms, max_ms, steps_to_first_token) over the steps
+    in which at least one request decoded.  The long prompt is injected
+    after the short decoders are warm, so with monolithic prefill the
+    stalled decode steps absorb the whole-prompt forward pass.
+
+    The whole scenario runs once untimed first: eager per-primitive XLA
+    compiles (first occurrence of each chunk shape) would otherwise swamp
+    the p99 and hide the thing being measured — steady-state stall.
+    """
+    def scenario():
+        eng = Engine(cfg, params=params, max_slots=4, max_seq_len=128,
+                     prefill_chunk=prefill_chunk)
+        shorts = [Request(prompt=[2 + i] * 6, max_new_tokens=40)
+                  for i in range(3)]
+        for r in shorts:
+            eng.add_request(r)
+        for _ in range(3):  # decode path warm before injection
+            eng.step()
+        long_req = Request(prompt=[7] * long_prompt,
+                           max_new_tokens=4 if fast else 8)
+        eng.add_request(long_req)
+        stall_ms = []
+        steps_to_first = None
+        steps = 0
+        while not long_req.done and steps < 600:
+            decoding = any(r.status is Status.RUNNING
+                           for r in eng.scheduler.running.values())
+            t0 = time.perf_counter()
+            eng.step()
+            dt = (time.perf_counter() - t0) * 1e3
+            steps += 1
+            if decoding:
+                stall_ms.append(dt)
+            if steps_to_first is None and long_req.output:
+                steps_to_first = steps
+        return np.asarray(stall_ms), steps_to_first
+
+    scenario()  # first run warms every shape on the path (eager compiles)
+    arr, steps_to_first = scenario()
+    return (float(np.percentile(arr, 50)), float(np.percentile(arr, 99)),
+            float(arr.max()), steps_to_first)
+
+
 def run(fast: bool = False):
     cfg = get_smoke("llama2-7b")
     probe = Engine(cfg, max_slots=1, max_seq_len=8)  # params donor
     t = Table("mixed_batch",
-              ["engine", "tok_s", "wall_s", "preemptions", "slots"])
+              ["engine", "tok_s", "wall_s", "preemptions", "slots",
+               "stall_p50_ms", "stall_p99_ms", "stall_max_ms", "ttft_steps"])
     pool = 512  # tokens of KV budget
     e1, tps1, w1 = run_engine(True, pool, params=probe.params, cfg=cfg)
     t.add("paged", round(tps1, 2), round(w1, 2), e1.scheduler.preempted,
-          e1.max_slots)
+          e1.max_slots, "-", "-", "-", "-")
     e2, tps2, w2 = run_engine(False, pool, params=probe.params, cfg=cfg)
-    t.add("contiguous", round(tps2, 2), round(w2, 2), "-", e2.max_slots)
-    t.add("speedup", round(tps1 / tps2, 2), "", "", "")
+    t.add("contiguous", round(tps2, 2), round(w2, 2), "-", e2.max_slots,
+          "-", "-", "-", "-")
+    t.add("speedup", round(tps1 / tps2, 2), "", "", "", "", "", "", "")
+
+    # --- chunked-prefill decode-stall sweep -------------------------------
+    long_prompt = 64 if fast else 96
+    chunks = [None, 32, 16] if fast else [None, 64, 32, 16, 8]
+    for c in chunks:
+        p50, p99, mx, ttft = decode_stalls(probe.params, cfg, c,
+                                           long_prompt=long_prompt,
+                                           fast=fast)
+        t.add("mono" if c is None else f"chunk={c}", "-", "-", "-", 4,
+              round(p50, 2), round(p99, 2), round(mx, 2), ttft)
     t.show()
     return t

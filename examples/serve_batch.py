@@ -43,20 +43,29 @@ def main():
                     help="Pallas kernel lowering: TPU scalar-prefetch "
                          "pipeline or GPU/Triton in-kernel gather "
                          "(default: auto from jax.default_backend())")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens prefilled per engine step "
+                         "(chunked continuous batching: prompts cache "
+                         "chunk-by-chunk interleaved with decode, so a "
+                         "long prompt never stalls the running batch; "
+                         "default: whole prompt in one monolithic pass)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     slots, max_seq, pool = 8, 128, 640
     rng = np.random.default_rng(0)
 
+    chunk = ("monolithic" if args.prefill_chunk is None
+             else f"{args.prefill_chunk} tok/step")
     print(f"== paged engine: {slots} slots, pool {pool} tokens, "
-          f"impl={args.impl} ==")
+          f"impl={args.impl}, prefill={chunk} ==")
     eng = Engine(cfg, max_slots=slots, max_seq_len=max_seq,
                  pool_tokens=pool, impl=args.impl,
                  pages_per_block=args.pages_per_block,
                  num_splits=args.num_splits,
                  combine_mode=args.combine_mode,
-                 backend=args.backend)
+                 backend=args.backend,
+                 prefill_chunk=args.prefill_chunk)
     reqs = wave(rng, args.requests, max_seq - args.max_new, args.max_new)
     t0 = time.perf_counter()
     eng.generate(reqs, max_steps=3000)
@@ -66,7 +75,8 @@ def main():
     print(f"{new_toks} tokens in {wall:.1f}s = {new_toks/wall:.2f} tok/s; "
           f"ttft p50 {ttfts[len(ttfts)//2]:.2f}s "
           f"p95 {ttfts[int(len(ttfts)*0.95)]:.2f}s; "
-          f"preemptions {eng.scheduler.preempted}")
+          f"preemptions {eng.scheduler.preempted}; "
+          f"prefill stalls {eng.scheduler.prefill_stalls}")
     print(eng.memory_report())
 
     # contiguous baseline under the same KV byte budget -> fewer slots

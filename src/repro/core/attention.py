@@ -28,11 +28,12 @@ import numpy as np
 
 from repro.core import flex
 from repro.kernels.flex_attention.ops import flex_attention
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import paged_attention, paged_prefill
 from repro.kernels.paged_attention.ref import ring_slot_positions
 
 # re-export: serving/bench code sizes decode grids through this module
 from repro.kernels.paged_attention.ops import choose_decode_params  # noqa: F401
+from repro.kernels.paged_attention.ops import choose_prefill_params  # noqa: F401
 
 
 def prefill_attention(
@@ -178,6 +179,112 @@ def _chunked_attention(q, k, v, mask_mod, score_mod,
     return out[:, :, :Q].astype(q.dtype)
 
 
+def prefill_attention_paged(
+    q: jax.Array,  # (B, C, H, D) — one prompt *chunk* per sequence
+    k_pages: jax.Array,  # (num_pages, P, Hkv, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages)
+    kv_lens: jax.Array,  # (B,) cached tokens incl. the chunk
+    q_start: jax.Array,  # (B,) absolute position of chunk token 0
+    *,
+    softcap: float = 0.0,
+    impl: str = "ref",
+    interpret: Optional[bool] = None,
+    kv_scale: float = 0.0,
+    pages_per_block: Optional[int] = None,
+    num_splits: Optional[int] = None,
+    combine_mode: Optional[str] = None,
+    backend: Optional[str] = None,
+    q_block: Optional[int] = None,
+) -> jax.Array:
+    """Chunked paged prefill attention — the prompt-phase counterpart of
+    `decode_attention`.  The chunk's K/V must already sit in the pages
+    (write-then-attend, like the decode path): queries attend causally
+    over the cached prefix pages *and* the chunk's own causal part, all
+    read through the block table.  ``impl="pallas"`` runs the prefix-aware
+    Q-block × KV-block kernel (TPU or GPU lowering per ``backend``);
+    anything else runs the jnp oracle.  Returns (B, C, H, D)."""
+    kernel_impl = "pallas" if impl == "pallas" else "ref"
+    return paged_prefill(
+        q, k_pages, v_pages, block_tables, kv_lens, q_start,
+        softcap=softcap, impl=kernel_impl, interpret=interpret,
+        kv_scale=kv_scale, pages_per_block=pages_per_block,
+        num_splits=num_splits, combine_mode=combine_mode, backend=backend,
+        q_block=q_block)
+
+
+def prefill_attention_windowed_chunk(
+    q: jax.Array,  # (B, C, H, D)
+    k_new: jax.Array,  # (B, C, Hkv, D) — the chunk's fresh K/V
+    v_new: jax.Array,
+    k_pages: jax.Array,  # (num_pages, P, Hkv, D) — ring pools, pre-write
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, ring)
+    q_start: jax.Array,  # (B,) cached prefix length (chunk NOT yet written)
+    q_lens: jax.Array,  # (B,) live chunk tokens
+    *,
+    window: int,
+    softcap: float = 0.0,
+    kv_scale: float = 0.0,
+) -> jax.Array:
+    """Sliding-window chunked prefill (attend-then-write fallback).
+
+    Ring-paged 'W' layers cannot use the write-then-attend kernel: a long
+    chunk's writes wrap the ring and overwrite prefix slots earlier
+    queries still need.  Instead the chunk attends over the *intact* ring
+    prefix (gathered, the slots hold exactly the last ``ring·P ≥ window``
+    prefix positions) plus its own fresh K/V, and the caller scatters the
+    chunk into the ring afterwards.  Bounded working set — the ring is
+    small by construction, so a jnp path suffices."""
+    B, C, H, D = q.shape
+    num_pages, P, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+
+    ring = -(-window // P) + 1
+    # mixed dense/windowed models share one table sized for the dense
+    # layers — only the first `ring` columns are ring slots here
+    block_tables = block_tables[:, :ring]
+    S = block_tables.shape[1] * P
+
+    safe = jnp.clip(block_tables, 0, num_pages - 1)
+    kpre = jax.lax.optimization_barrier(
+        k_pages[safe].reshape(B, S, Hkv, D))
+    vpre = jax.lax.optimization_barrier(
+        v_pages[safe].reshape(B, S, Hkv, D))
+    if kv_scale > 0:
+        kpre = (kpre.astype(jnp.float32) * kv_scale).astype(q.dtype)
+        vpre = (vpre.astype(jnp.float32) * kv_scale).astype(q.dtype)
+
+    # positions the ring slots hold w.r.t. the *prefix* (length q_start)
+    pre_pos = ring_slot_positions(q_start, P, ring, S)  # (B, S)
+    qpos = q_start[:, None] + jnp.arange(C)[None, :]  # (B, C)
+    live_pre = ((pre_pos >= 0) & (pre_pos < q_start[:, None])
+                & (block_tables >= 0)[:, :, None].repeat(P, 2).reshape(B, S))
+    # sliding window: k ≤ q and q − k < window (flex.sliding_window_mask)
+    mask_pre = (live_pre[:, None, :]
+                & (qpos[:, :, None] - pre_pos[:, None, :] < window))
+    ci = jnp.arange(C)
+    mask_new = ((ci[None, :] <= ci[:, None])
+                & (ci[:, None] - ci[None, :] < window))[None]  # (1, C, C)
+    mask_new = mask_new & (ci[None, None, :] < q_lens[:, None, None])
+    mask = jnp.concatenate(
+        [mask_pre, jnp.broadcast_to(mask_new, (B, C, C))], axis=2)
+
+    k_all = jnp.concatenate([kpre, k_new.astype(kpre.dtype)], axis=1)
+    v_all = jnp.concatenate([vpre, v_new.astype(vpre.dtype)], axis=1)
+    qg = (q * scale).reshape(B, C, Hkv, G, D)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qg, k_all.astype(q.dtype)
+                   ).astype(jnp.float32)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bkgcs,bskd->bckgd", w, v_all.astype(jnp.float32))
+    return out.reshape(B, C, H, D).astype(q.dtype)
+
+
 def decode_attention(
     q: jax.Array,  # (B, H, D) — one token per sequence
     k_pages: jax.Array,  # (num_pages, P, Hkv, D)
@@ -271,6 +378,9 @@ def _partial_decode(q, k_pages, v_pages, block_tables, lens, *, window=0,
         ring = -(-window // P) + 1
         pos = ring_slot_positions(lens, P, ring, S)
         live = (pos >= 0) & (pos < lens[:, None]) & (pos >= lens[:, None] - window)
+        # table may be wider than the ring (mixed dense/windowed models);
+        # slots past the ring never hold this layer's KV
+        live &= (jnp.arange(S) // P < ring)[None, :]
     else:
         slot = jnp.arange(S)
         pos = (slot // P * page_stride + page_offset) * P + slot % P

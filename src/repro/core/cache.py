@@ -131,6 +131,41 @@ def write_layer_prefill(k_pages_l: jax.Array, v_pages_l: jax.Array,
             _scatter_tokens(v_pages_l, phys, off, v))
 
 
+def write_layer_prefill_at(k_pages_l: jax.Array, v_pages_l: jax.Array,
+                           tables: jax.Array, k: jax.Array, v: jax.Array,
+                           start: jax.Array, q_lens: jax.Array,
+                           window: int = 0
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter a prompt *chunk* (B, C, H, D) into pages for one layer.
+
+    The chunked-prefill generalisation of `write_layer_prefill`: chunk
+    token ``i`` lands at absolute position ``start[b] + i``; tokens past
+    ``q_lens`` (batch padding) are masked out.  ``start == 0`` and
+    ``q_lens == lens`` reproduces the whole-prompt scatter exactly.
+    ``window > 0`` wraps the logical page index over the ring; writes
+    older than the ring capacity are dropped so at most one write hits
+    each (page, offset) slot (deterministic scatter).
+    """
+    B, C = k.shape[:2]
+    ps = k_pages_l.shape[1]
+    off_i = jnp.arange(C, dtype=jnp.int32)[None, :]
+    pos = start[:, None].astype(jnp.int32) + off_i
+    logical = pos // ps
+    valid = off_i < q_lens[:, None]
+    if window > 0:
+        ring = -(-window // ps) + 1
+        logical = logical % ring
+        end = (start + q_lens)[:, None]
+        valid &= pos >= end - ring * ps
+    phys = jnp.take_along_axis(tables, jnp.minimum(logical,
+                                                   tables.shape[1] - 1),
+                               axis=1)
+    off = pos % ps
+    phys = jnp.where(valid, phys, -1)
+    return (_scatter_tokens(k_pages_l, phys, off, k),
+            _scatter_tokens(v_pages_l, phys, off, v))
+
+
 def gather_layer(k_pages_l: jax.Array, v_pages_l: jax.Array,
                  tables: jax.Array, max_len: int
                  ) -> Tuple[jax.Array, jax.Array]:

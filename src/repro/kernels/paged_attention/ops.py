@@ -45,10 +45,12 @@ import numpy as np
 
 from repro.kernels import resolve_backend
 from repro.kernels.paged_attention.paged_attention import (
-    decode_partition, paged_attention_kernel, resolve_combine_mode)
+    decode_partition, paged_attention_kernel, paged_prefill_kernel,
+    resolve_combine_mode)
 from repro.kernels.paged_attention.paged_attention_gpu import (
-    paged_attention_kernel_gpu)
-from repro.kernels.paged_attention.ref import paged_attention_ref
+    paged_attention_kernel_gpu, paged_prefill_kernel_gpu)
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_prefill_ref)
 
 # KV tokens per grid step the MXU digests at full width (TPU lowering).
 _TARGET_BLOCK_TOKENS = 128
@@ -126,6 +128,99 @@ def choose_decode_params(
     if gpu and combine_mode in (None, "auto"):
         return ppb, ns, "jnp"
     return ppb, ns, resolve_combine_mode(combine_mode, ns)
+
+
+# Chunked-prefill Q-block sizing: target this many score-tile rows
+# (q_block·G) per grid step — MXU-height on TPU; the GPU lowering reuses
+# the same target (its CTA walks the KV blocks in-kernel either way).
+_TARGET_Q_ROWS = 128
+
+
+def choose_prefill_params(
+    max_pages: int,
+    page_size: int,
+    head_dim: int,
+    chunk: int,
+    group: int,
+    pages_per_block: Optional[int] = None,
+    num_splits: Optional[int] = None,
+    combine_mode: Optional[str] = None,
+    q_block: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> Tuple[int, int, str, int]:
+    """Auto-tune ``(pages_per_block, num_splits, combine_mode, q_block)``
+    for the chunked-prefill kernels.
+
+    KV-block width reuses the decode heuristic (`choose_decode_params`).
+    Split-K defaults to **1**: the Q-block axis already multiplies the
+    grid by ``ceil(chunk / q_block)``, so extra splits only pay combine
+    overhead unless the caller asks for them (the conformance suite
+    does).  ``q_block`` targets ``_TARGET_Q_ROWS`` score-tile rows and is
+    clamped to the chunk.
+    """
+    ppb, ns, cm = choose_decode_params(
+        max_pages, page_size, head_dim, pages_per_block,
+        1 if num_splits is None else num_splits, combine_mode,
+        backend=backend)
+    if q_block is None:
+        q_block = max(1, _TARGET_Q_ROWS // max(1, int(group)))
+    q_block = max(1, min(int(q_block), int(chunk)))
+    return ppb, ns, cm, q_block
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "softcap", "impl", "interpret", "kv_scale",
+                     "pages_per_block", "num_splits", "combine_mode",
+                     "backend", "q_block"),
+)
+def paged_prefill(
+    q: jax.Array,  # (B, C, n_heads, head_dim) — one prompt chunk per seq
+    k_pages: jax.Array,  # (num_pages, page_size, n_kv_heads, head_dim)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages)
+    kv_lens: jax.Array,  # (B,) cached tokens incl. the chunk
+    q_start: jax.Array,  # (B,) absolute position of chunk token 0
+    *,
+    scale: Optional[float] = None,
+    softcap: float = 0.0,
+    impl: str = "pallas",
+    interpret: Optional[bool] = None,
+    kv_scale: float = 0.0,
+    pages_per_block: Optional[int] = None,
+    num_splits: Optional[int] = None,
+    combine_mode: Optional[str] = None,
+    backend: Optional[str] = None,  # "tpu" | "gpu" | None → auto
+    q_block: Optional[int] = None,  # Q rows per grid step (None → auto)
+) -> jax.Array:
+    """Chunked paged prefill: ``C`` query tokens per sequence attend
+    causally over the sequence's paged KV cache (prefix pages written by
+    earlier chunks + the chunk's own causal part, all read through the
+    block table).  The write-then-attend counterpart of
+    `paged_attention`; see `ref.paged_prefill_ref` for the contract.
+    """
+    B, C, n_heads, head_dim = q.shape
+    n_kv = k_pages.shape[2]
+    page_size = k_pages.shape[1]
+    max_pages = block_tables.shape[1]
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(head_dim))
+
+    if impl == "ref":
+        return paged_prefill_ref(
+            q, k_pages, v_pages, block_tables, kv_lens, q_start,
+            scale=scale, softcap=softcap, kv_scale=kv_scale)
+
+    backend = resolve_backend(backend)
+    ppb, ns, cm, qb = choose_prefill_params(
+        max_pages, page_size, head_dim, C, n_heads // n_kv,
+        pages_per_block, num_splits, combine_mode, q_block, backend=backend)
+    kernel = (paged_prefill_kernel_gpu if backend == "gpu"
+              else paged_prefill_kernel)
+    return kernel(
+        q, k_pages, v_pages, block_tables, kv_lens, q_start,
+        scale=scale, softcap=softcap, interpret=interpret,
+        kv_scale=kv_scale, pages_per_block=ppb, num_splits=ns,
+        q_block=qb, combine_mode=cm)
 
 
 @functools.partial(

@@ -116,6 +116,12 @@ NEG_INF = -1e30
 # stay sequential.  Combine grid (batch, kv_head): fully parallel.
 DECODE_DIM_SEMANTICS = ("parallel", "parallel", "parallel", "arbitrary")
 COMBINE_DIM_SEMANTICS = ("parallel", "parallel")
+# Chunked-prefill grid (batch, kv_head, q_block, split, kv_block): every
+# (b, h, nq, s) slot is an independent online softmax over its KV range,
+# so the first four axes parallelise; the kv-block axis accumulates in
+# scratch and stays sequential.
+PREFILL_DIM_SEMANTICS = ("parallel", "parallel", "parallel", "parallel",
+                         "arbitrary")
 
 
 def decode_partition(max_pages: int, pages_per_block: int = 1,
@@ -442,6 +448,258 @@ def paged_attention_partials(
         interpret=resolve_interpret(interpret),
     )(tables3d, lens.astype(jnp.int32), q,
       *([k_pages] * ppb), *([v_pages] * ppb))
+
+
+def _prefill_kernel(
+    *refs,
+    pages_per_block: int,
+    blocks_per_split: int,
+    q_block: int,
+    group: int,
+    scale: float,
+    softcap: float,
+    kv_scale: float = 0.0,
+):
+    """Chunked-prefill kernel body: one Q-block of ``q_block·G`` rows per
+    (b, h, nq, s) slot, online-softmax over its split's KV blocks.
+
+    Positional layout mirrors `_decode_kernel` with one extra scalar
+    prefetch (``q_start``) and the q-block grid axis: 3 scalar-prefetch,
+    1 + 2·ppb inputs, 3 outputs, 3 scratch.
+    """
+    ppb = pages_per_block
+    tables_ref, lens_ref, qstart_ref = refs[0], refs[1], refs[2]
+    q_ref = refs[3]
+    k_refs = refs[4:4 + ppb]  # each (1, P, 1, D)
+    v_refs = refs[4 + ppb:4 + 2 * ppb]
+    m_out, l_out, acc_out = refs[4 + 2 * ppb:7 + 2 * ppb]
+    m_ref, l_ref, acc_ref = refs[7 + 2 * ppb:]
+
+    b = pl.program_id(0)
+    nq = pl.program_id(2)
+    s = pl.program_id(3)
+    blk = pl.program_id(4)
+    page_size = k_refs[0].shape[1]
+    R = q_block * group  # rows: r = chunk-token·G + head-group
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    L = lens_ref[b]  # kv_lens: cached tokens incl. the chunk
+    q0 = qstart_ref[b]  # absolute position of chunk token 0
+    block_rank = s * blocks_per_split + blk
+    first_page = block_rank * ppb
+    slot = jax.lax.broadcasted_iota(jnp.int32, (page_size,), 0)
+
+    kvpos = jnp.concatenate(
+        [(first_page + j) * page_size + slot for j in range(ppb)])
+    live_kv = kvpos < L  # (ppb·P,)
+    row = jax.lax.broadcasted_iota(jnp.int32, (R,), 0)
+    qpos = q0 + nq * q_block + row // group  # (R,) absolute q positions
+    # causal upper bound for the whole Q-block: KV blocks wholly past the
+    # block's last query never contribute — skip their compute (their DMAs
+    # are already elided by the rank clamp in `_blocked_tables`).
+    qpos_max = q0 + nq * q_block + q_block - 1
+    block_live = (first_page * page_size < L) & \
+        (first_page * page_size <= qpos_max)
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0, 0, 0].astype(jnp.float32) * scale  # (R, D)
+        k = jnp.concatenate([r[0, :, 0, :] for r in k_refs], axis=0)
+        v = jnp.concatenate([r[0, :, 0, :] for r in v_refs], axis=0)
+        k = k.astype(jnp.float32)  # (ppb·P, D)
+        v = v.astype(jnp.float32)
+        if kv_scale > 0:
+            k = k * kv_scale
+            v = v * kv_scale
+
+        s_ = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s_ = softcap * jnp.tanh(s_ / softcap)
+        live = live_kv[None, :] & (kvpos[None, :] <= qpos[:, None])
+        s_ = jnp.where(live, s_, NEG_INF)  # (R, ppb·P)
+
+        m_prev = m_ref[...]  # (R, 1)
+        m_cur = jnp.max(s_, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.where(live, jnp.exp(s_ - m_new), 0.0)
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(blk == blocks_per_split - 1)
+    def _emit_partial():
+        m_out[0, 0, 0, 0] = m_ref[...][:, 0]
+        l_out[0, 0, 0, 0] = l_ref[...][:, 0]
+        acc_out[0, 0, 0, 0] = acc_ref[...]
+
+
+def _prefill_q_blocks(q: jax.Array, n_kv: int, q_block: int
+                      ) -> Tuple[jax.Array, int]:
+    """(B, C, H, D) chunk queries → (B, n_kv, NQ, q_block·G, D) row blocks.
+
+    Row ``r`` of a block is chunk token ``r // G``, head group ``r % G``
+    — the layout both prefill lowerings and the partials oracle share.
+    """
+    B, C, H, D = q.shape
+    G = H // n_kv
+    nq = -(-C // q_block)
+    qpad = jnp.pad(q, ((0, 0), (0, nq * q_block - C), (0, 0), (0, 0)))
+    qb = qpad.reshape(B, nq, q_block, n_kv, G, D).transpose(0, 3, 1, 2, 4, 5)
+    return qb.reshape(B, n_kv, nq, q_block * G, D), nq
+
+
+def combine_prefill_partials(m: jax.Array, l: jax.Array, acc: jax.Array,
+                             C: int, q_block: int, *, dtype=jnp.float32,
+                             mode: Optional[str] = None,
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """Merge chunked-prefill split-K partials through the *decode* combine.
+
+    m, l: (B, Hkv, NQ, S, R); acc: (B, Hkv, NQ, S, R, D) with
+    ``R = q_block·G``.  The q-block axis folds into the batch axis so
+    `combine_partials` (jnp epilogue or the fused Pallas kernel) applies
+    unchanged — one combine implementation across decode and prefill.
+    Returns (B, C, H, D).
+    """
+    B, n_kv, NQ, S, R = m.shape
+    D = acc.shape[-1]
+    G = R // q_block
+    m2 = m.transpose(0, 2, 1, 3, 4).reshape(B * NQ, n_kv, S, R)
+    l2 = l.transpose(0, 2, 1, 3, 4).reshape(B * NQ, n_kv, S, R)
+    acc2 = acc.transpose(0, 2, 1, 3, 4, 5).reshape(B * NQ, n_kv, S, R, D)
+    o = combine_partials(m2, l2, acc2, dtype=dtype, mode=mode,
+                         interpret=interpret)  # (B·NQ, n_kv, R, D)
+    o = o.reshape(B, NQ, n_kv, q_block, G, D).transpose(0, 1, 3, 2, 4, 5)
+    return o.reshape(B, NQ * q_block, n_kv * G, D)[:, :C]
+
+
+def paged_prefill_partials(
+    q: jax.Array,  # (B, C, n_heads, D) — one prompt chunk per sequence
+    k_pages: jax.Array,  # (num_pages, P, n_kv, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages) int32 (may contain -1)
+    kv_lens: jax.Array,  # (B,) cached tokens incl. the chunk
+    q_start: jax.Array,  # (B,) absolute position of chunk token 0
+    *,
+    scale: float,
+    softcap: float = 0.0,
+    interpret: Optional[bool] = None,
+    kv_scale: float = 0.0,
+    pages_per_block: int = 1,
+    num_splits: int = 1,
+    q_block: int = 1,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill split-K partials (TPU lowering).
+
+    Q-block × cached-KV-block grid: ``(B, n_kv, NQ, num_splits, bps)``,
+    sharing `decode_partition`'s page ranges and the decode kernel's
+    ``(m, l, acc)`` partial contract with the GQA row axis widened to
+    ``q_block·G`` rows.  Returns ((B,Hkv,NQ,S,R) m, (B,Hkv,NQ,S,R) l,
+    (B,Hkv,NQ,S,R,D) acc) — f32, shaped for `combine_prefill_partials`.
+    """
+    B, C, n_heads, D = q.shape
+    num_pages, page_size, n_kv, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    G = n_heads // n_kv
+
+    ppb, _, S, bps = decode_partition(max_pages, pages_per_block, num_splits)
+    padded_pages = S * bps * ppb
+    qb5, NQ = _prefill_q_blocks(q, n_kv, q_block)
+    R = q_block * G
+
+    tables3d = _blocked_tables(
+        block_tables, kv_lens, num_pages=num_pages, page_size=page_size,
+        window=0, padded_pages=padded_pages, pages_per_block=ppb)
+
+    def q_map(b, h, nq, s, blk, tables, lens, qstart):
+        return (b, h, nq, 0, 0)
+
+    def part_map(b, h, nq, s, blk, tables, lens, qstart):
+        return (b, h, nq, s, 0)
+
+    def acc_map(b, h, nq, s, blk, tables, lens, qstart):
+        return (b, h, nq, s, 0, 0)
+
+    def kv_map(b, h, nq, s, blk, tables, lens, qstart, *, j):
+        del lens, qstart
+        return (tables[b, s * bps + blk, j], 0, h, 0)
+
+    kv_spec = lambda j: pl.BlockSpec((1, page_size, 1, D),
+                                     functools.partial(kv_map, j=j))
+
+    kernel = functools.partial(
+        _prefill_kernel, pages_per_block=ppb, blocks_per_split=bps,
+        q_block=q_block, group=G, scale=scale, softcap=softcap,
+        kv_scale=kv_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(B, n_kv, NQ, S, bps),
+            in_specs=(
+                [pl.BlockSpec((1, 1, 1, R, D), q_map)]
+                + [kv_spec(j) for j in range(ppb)]
+                + [kv_spec(j) for j in range(ppb)]
+            ),
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, 1, R), part_map),
+                pl.BlockSpec((1, 1, 1, 1, R), part_map),
+                pl.BlockSpec((1, 1, 1, 1, R, D), acc_map),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((R, 1), jnp.float32),
+                pltpu.VMEM((R, 1), jnp.float32),
+                pltpu.VMEM((R, D), jnp.float32),
+            ],
+        ),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=PREFILL_DIM_SEMANTICS),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_kv, NQ, S, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, NQ, S, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, NQ, S, R, D), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(tables3d, kv_lens.astype(jnp.int32), q_start.astype(jnp.int32), qb5,
+      *([k_pages] * ppb), *([v_pages] * ppb))
+
+
+def paged_prefill_kernel(
+    q: jax.Array,  # (B, C, n_heads, D)
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    kv_lens: jax.Array,
+    q_start: jax.Array,
+    *,
+    scale: float,
+    softcap: float = 0.0,
+    interpret: Optional[bool] = None,
+    kv_scale: float = 0.0,
+    pages_per_block: int = 1,
+    num_splits: int = 1,
+    q_block: int = 1,
+    combine_mode: Optional[str] = None,
+) -> jax.Array:
+    """Full chunked-prefill attention (TPU): partials + shared combine."""
+    m, l, acc = paged_prefill_partials(
+        q, k_pages, v_pages, block_tables, kv_lens, q_start, scale=scale,
+        softcap=softcap, interpret=interpret, kv_scale=kv_scale,
+        pages_per_block=pages_per_block, num_splits=num_splits,
+        q_block=q_block)
+    return combine_prefill_partials(m, l, acc, q.shape[1], q_block,
+                                    dtype=q.dtype, mode=combine_mode,
+                                    interpret=interpret)
 
 
 def decode_grid_steps(max_pages: int, *, pages_per_block: int = 1,

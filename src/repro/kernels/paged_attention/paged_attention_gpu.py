@@ -78,7 +78,8 @@ from jax.experimental.pallas import triton as plgpu
 
 from repro.kernels import resolve_interpret
 from repro.kernels.paged_attention.paged_attention import (
-    NEG_INF, _blocked_tables, combine_partials, decode_partition)
+    NEG_INF, _blocked_tables, _prefill_q_blocks, combine_partials,
+    combine_prefill_partials, decode_partition)
 
 # Triton launch shape: warps per CTA / software pipeline depth for the
 # gather+dot loop.  Modest defaults — one (G, ppb·P) tile per CTA is a
@@ -248,6 +249,191 @@ def paged_attention_partials_gpu(
             num_warps=_NUM_WARPS, num_stages=_NUM_STAGES),
         interpret=resolve_interpret(interpret, backend="gpu"),
     )(tables3d, lens.astype(jnp.int32), q, k_pages, v_pages)
+
+
+def _prefill_kernel_gpu(
+    tables_ref,  # (B, n_blocks, ppb) int32 — rank-clamped table slice
+    lens_ref,  # (B,) int32 — kv_lens (cached tokens incl. the chunk)
+    qstart_ref,  # (B,) int32 — absolute position of chunk token 0
+    q_ref,  # (1, 1, 1, R, D) block for this (b, h, nq)
+    k_ref,  # (num_pages, P, n_kv, D) — whole pool, gathered in-kernel
+    v_ref,
+    m_out,  # (1, 1, 1, 1, R)
+    l_out,
+    acc_out,  # (1, 1, 1, 1, R, D)
+    *,
+    pages_per_block: int,
+    blocks_per_split: int,
+    q_block: int,
+    group: int,
+    scale: float,
+    softcap: float,
+    kv_scale: float,
+):
+    """Chunked-prefill GPU body: one CTA per (b, h, nq, s) slot, in-kernel
+    ``fori_loop`` over the split's KV blocks with block-table gathers —
+    the decode kernel's structure with a ``q_block·G``-row score tile and
+    a causal trip-count clamp (blocks wholly past the Q-block's last
+    query are never gathered)."""
+    ppb = pages_per_block
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    nq = pl.program_id(2)
+    s = pl.program_id(3)
+    page_size = k_ref.shape[1]
+    R, D = q_ref.shape[3], q_ref.shape[4]
+
+    q = q_ref[0, 0, 0].astype(jnp.float32) * scale  # (R, D)
+    L = lens_ref[b]
+    q0 = qstart_ref[b]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (page_size,), 0)
+    row = jax.lax.broadcasted_iota(jnp.int32, (R,), 0)
+    qpos = q0 + nq * q_block + row // group  # (R,)
+    qpos_max = q0 + nq * q_block + q_block - 1
+    # live + causal block bound: only blocks covering tokens < min(L,
+    # qpos_max+1) contribute — the rest do zero trips (init partial).
+    kv_hi = jnp.minimum(L, qpos_max + 1)
+    n_live_blocks = ((kv_hi + page_size - 1) // page_size + ppb - 1) // ppb
+    n_trips = jnp.clip(n_live_blocks - s * blocks_per_split, 0,
+                       blocks_per_split)
+
+    def body(blk, carry):
+        m_prev, l_prev, acc_prev = carry  # (R, 1), (R, 1), (R, D)
+        block_rank = s * blocks_per_split + blk
+        first_page = block_rank * ppb
+        ks, vs, poss = [], [], []
+        for j in range(ppb):
+            pg = first_page + j
+            poss.append(pg * page_size + slot)
+            page = tables_ref[b, block_rank, j]
+            ks.append(k_ref[page, :, h, :])  # (P, D)
+            vs.append(v_ref[page, :, h, :])
+        kvpos = jnp.concatenate(poss)  # (ppb·P,)
+        k = jnp.concatenate(ks, axis=0).astype(jnp.float32)
+        v = jnp.concatenate(vs, axis=0).astype(jnp.float32)
+        if kv_scale > 0:
+            k = k * kv_scale
+            v = v * kv_scale
+
+        s_ = _dot(q, k.T)  # (R, ppb·P)
+        if softcap > 0:
+            s_ = softcap * jnp.tanh(s_ / softcap)
+        live = (kvpos < L)[None, :] & (kvpos[None, :] <= qpos[:, None])
+        s_ = jnp.where(live, s_, NEG_INF)
+
+        m_cur = jnp.max(s_, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.where(live, jnp.exp(s_ - m_new), 0.0)
+        l_new = l_prev * alpha + jnp.sum(pexp, axis=1, keepdims=True)
+        acc_new = acc_prev * alpha + _dot(pexp, v)
+        return m_new, l_new, acc_new
+
+    init = (jnp.full((R, 1), NEG_INF, jnp.float32),
+            jnp.zeros((R, 1), jnp.float32),
+            jnp.zeros((R, D), jnp.float32))
+    m, l, acc = jax.lax.fori_loop(0, n_trips, body, init)
+    m_out[0, 0, 0, 0] = m[:, 0]
+    l_out[0, 0, 0, 0] = l[:, 0]
+    acc_out[0, 0, 0, 0] = acc
+
+
+def paged_prefill_partials_gpu(
+    q: jax.Array,  # (B, C, n_heads, D)
+    k_pages: jax.Array,  # (num_pages, P, n_kv, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages)
+    kv_lens: jax.Array,  # (B,)
+    q_start: jax.Array,  # (B,)
+    *,
+    scale: float,
+    softcap: float = 0.0,
+    interpret: Optional[bool] = None,
+    kv_scale: float = 0.0,
+    pages_per_block: int = 1,
+    num_splits: int = 1,
+    q_block: int = 1,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill split-K partials (Triton lowering) — identical
+    contract to the TPU `paged_prefill_partials`; gated by the same
+    `ref.paged_prefill_ref` oracle."""
+    B, C, n_heads, D = q.shape
+    num_pages, page_size, n_kv, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    G = n_heads // n_kv
+
+    ppb, _, S, bps = decode_partition(max_pages, pages_per_block, num_splits)
+    padded_pages = S * bps * ppb
+    qb5, NQ = _prefill_q_blocks(q, n_kv, q_block)
+    R = q_block * G
+
+    tables3d = _blocked_tables(
+        block_tables, kv_lens, num_pages=num_pages, page_size=page_size,
+        window=0, padded_pages=padded_pages, pages_per_block=ppb)
+
+    kernel = functools.partial(
+        _prefill_kernel_gpu, pages_per_block=ppb, blocks_per_split=bps,
+        q_block=q_block, group=G, scale=scale, softcap=softcap,
+        kv_scale=kv_scale)
+
+    whole = lambda arr: pl.BlockSpec(arr.shape,
+                                     lambda b, h, nq, s: (0,) * arr.ndim)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_kv, NQ, S),
+        in_specs=[
+            whole(tables3d),
+            whole(kv_lens),
+            whole(q_start),
+            pl.BlockSpec((1, 1, 1, R, D), lambda b, h, nq, s: (b, h, nq, 0, 0)),
+            whole(k_pages),
+            whole(v_pages),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, 1, R), lambda b, h, nq, s: (b, h, nq, s, 0)),
+            pl.BlockSpec((1, 1, 1, 1, R), lambda b, h, nq, s: (b, h, nq, s, 0)),
+            pl.BlockSpec((1, 1, 1, 1, R, D),
+                         lambda b, h, nq, s: (b, h, nq, s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_kv, NQ, S, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, NQ, S, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_kv, NQ, S, R, D), jnp.float32),
+        ],
+        compiler_params=plgpu.TritonCompilerParams(
+            num_warps=_NUM_WARPS, num_stages=_NUM_STAGES),
+        interpret=resolve_interpret(interpret, backend="gpu"),
+    )(tables3d, kv_lens.astype(jnp.int32), q_start.astype(jnp.int32), qb5,
+      k_pages, v_pages)
+
+
+def paged_prefill_kernel_gpu(
+    q: jax.Array,  # (B, C, n_heads, D)
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    kv_lens: jax.Array,
+    q_start: jax.Array,
+    *,
+    scale: float,
+    softcap: float = 0.0,
+    interpret: Optional[bool] = None,
+    kv_scale: float = 0.0,
+    pages_per_block: int = 1,
+    num_splits: int = 1,
+    q_block: int = 1,
+    combine_mode: Optional[str] = None,
+) -> jax.Array:
+    """Full chunked-prefill attention (GPU): Triton partials + the shared
+    split-K combine (backend-independent, same oracle)."""
+    m, l, acc = paged_prefill_partials_gpu(
+        q, k_pages, v_pages, block_tables, kv_lens, q_start, scale=scale,
+        softcap=softcap, interpret=interpret, kv_scale=kv_scale,
+        pages_per_block=pages_per_block, num_splits=num_splits,
+        q_block=q_block)
+    return combine_prefill_partials(m, l, acc, q.shape[1], q_block,
+                                    dtype=q.dtype, mode=combine_mode,
+                                    interpret=interpret)
 
 
 def paged_attention_kernel_gpu(

@@ -91,6 +91,10 @@ def _gathered_scores(q, k_pages, v_pages, block_tables, lens, *,
         ring = -(-window // page_size) + 1
         pos = ring_slot_positions(lens, page_size, ring, S)
         live = (pos >= 0) & (pos < lens[:, None]) & (pos >= lens[:, None] - window)
+        # mixed dense/windowed tables are wider than the ring — slots past
+        # it belong to the dense layers' pages, never this layer's ring
+        # (the Pallas kernels mask the same way: ``pg < ring``)
+        live &= (jnp.arange(S) // page_size < ring)[None, :]
     else:
         pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
         live = pos < lens[:, None]
@@ -103,6 +107,158 @@ def _gathered_scores(q, k_pages, v_pages, block_tables, lens, *,
     if softcap > 0:
         scores = softcap * jnp.tanh(scores / softcap)
     return scores, live, v
+
+
+def paged_prefill_ref(
+    q: jax.Array,  # (B, C, n_heads, head_dim) — one prompt *chunk* per seq
+    k_pages: jax.Array,  # (num_pages, page_size, n_kv, head_dim)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages) int32, NULL = -1
+    kv_lens: jax.Array,  # (B,) — cached tokens incl. the current chunk
+    q_start: jax.Array,  # (B,) — absolute position of chunk token 0
+    *,
+    scale: Optional[float] = None,
+    softcap: float = 0.0,
+    kv_scale: float = 0.0,
+) -> jax.Array:
+    """Oracle for *chunked paged prefill*: a chunk of ``C`` query tokens
+    attends causally over the sequence's paged KV cache.
+
+    Contract (write-then-attend, mirroring the decode path): the chunk's
+    K/V have already been scattered into the pages, so the cache holds
+    ``kv_lens[b]`` tokens and query token ``i`` sits at absolute position
+    ``q_start[b] + i``.  It attends over cached positions ``<= q_start+i``
+    — the prefix written by earlier chunks *and* the causal part of its
+    own chunk, all read back through the block table (Alg.1 GATHER).
+    Rows past the live chunk (``q_start + i >= kv_lens``) are padding;
+    their output is unspecified (finite, ignored by callers).
+
+    ``q_start == 0`` and ``kv_lens == C`` is whole-prompt prefill;
+    ``C == 1`` degenerates to `paged_attention_ref` at ``lens=kv_lens``.
+    Sliding-window (ring-paged) layers are handled by the jnp fallback in
+    `core.attention` — the ring overwrites make "read the chunk back from
+    pages" ill-defined there.
+    """
+    B, C, n_heads, head_dim = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(head_dim)
+    num_pages, page_size, n_kv, _ = k_pages.shape
+    S = block_tables.shape[1] * page_size
+    g = n_heads // n_kv
+
+    safe = jnp.clip(block_tables, 0, num_pages - 1)
+    k = jax.lax.optimization_barrier(k_pages[safe].reshape(B, S, n_kv, head_dim))
+    v = jax.lax.optimization_barrier(v_pages[safe].reshape(B, S, n_kv, head_dim))
+    if kv_scale > 0:
+        k = (k.astype(jnp.float32) * kv_scale).astype(q.dtype)
+        v = (v.astype(jnp.float32) * kv_scale).astype(q.dtype)
+
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    live_kv = pos < kv_lens[:, None]
+    live_kv &= (block_tables >= 0)[:, :, None].repeat(page_size, 2).reshape(B, S)
+    qpos = q_start[:, None] + jnp.arange(C)[None, :]  # (B, C)
+    causal = pos[:, None, :] <= qpos[:, :, None]  # (B, C, S)
+    live = live_kv[:, None, :] & causal
+
+    qg = q.reshape(B, C, n_kv, g, head_dim) * scale
+    scores = jnp.einsum("bckgd,bskd->bkgcs", qg, k.astype(q.dtype)
+                        ).astype(jnp.float32)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(live[:, None, None, :, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows (padding)
+    out = jnp.einsum("bkgcs,bskd->bckgd", w, v.astype(jnp.float32))
+    return out.reshape(B, C, n_heads, head_dim).astype(q.dtype)
+
+
+def paged_prefill_partials_ref(
+    q: jax.Array,  # (B, C, n_heads, head_dim)
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # (B, max_pages)
+    kv_lens: jax.Array,  # (B,)
+    q_start: jax.Array,  # (B,)
+    *,
+    scale: Optional[float] = None,
+    softcap: float = 0.0,
+    kv_scale: float = 0.0,
+    num_splits: int = 1,
+    pages_per_block: int = 1,
+    q_block: int = 1,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Split-K oracle for the chunked-prefill kernels: per-(q-block, split)
+    un-normalised ``(m, l, acc)`` partials over the same KV-block ranges
+    `decode_partition` assigns — the identical partial contract the decode
+    kernels emit, with the GQA row axis widened to ``q_block·G`` rows
+    (row ``r`` = chunk token ``r // G``, head group ``r % G``).
+
+    Returns (m, l, acc) shaped ((B,Hkv,NQ,S,R), (B,Hkv,NQ,S,R),
+    (B,Hkv,NQ,S,R,D)) with ``NQ = ceil(C / q_block)``, ``R = q_block·G``
+    — f32, directly mergeable by ``combine_partials`` over axis S after
+    folding NQ into the batch axis.
+    """
+    NEG_INF = -1e30
+    B, C, n_heads, head_dim = q.shape
+    n_kv = k_pages.shape[2]
+    page_size = k_pages.shape[1]
+    max_pages = block_tables.shape[1]
+    S_tok = max_pages * page_size
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(head_dim))
+    g = n_heads // n_kv
+
+    from repro.kernels.paged_attention.paged_attention import decode_partition
+    ppb, _, ns, bps = decode_partition(max_pages, pages_per_block, num_splits)
+    chunk = bps * ppb * page_size
+    qb = max(1, min(int(q_block), C))
+    nq = -(-C // qb)
+    Cp = nq * qb
+
+    qpad = jnp.pad(q, ((0, 0), (0, Cp - C), (0, 0), (0, 0)))
+    qg = qpad.reshape(B, nq, qb, n_kv, g, head_dim) * scale
+    safe = jnp.clip(block_tables, 0, k_pages.shape[0] - 1)
+    k = k_pages[safe].reshape(B, S_tok, n_kv, head_dim)
+    v = v_pages[safe].reshape(B, S_tok, n_kv, head_dim)
+    if kv_scale > 0:
+        k = (k.astype(jnp.float32) * kv_scale).astype(q.dtype)
+        v = (v.astype(jnp.float32) * kv_scale).astype(q.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S_tok)[None, :], (B, S_tok))
+    live_kv = pos < kv_lens[:, None]
+    live_kv &= (block_tables >= 0)[:, :, None].repeat(page_size, 2
+                                                      ).reshape(B, S_tok)
+    qpos = q_start[:, None] + jnp.arange(Cp)[None, :]  # (B, Cp)
+
+    # (B, n_kv, nq, qb, g, S) scores, rows r = t·G + g as the kernels emit
+    scores = jnp.einsum("bntkgd,bskd->bkntgs", qg, k.astype(q.dtype)
+                        ).astype(jnp.float32)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    live = (live_kv[:, None, :] & (pos[:, None, :] <= qpos[:, :, None])
+            ).reshape(B, nq, qb, S_tok)  # (B, nq, qb, S)
+    live = live[:, None, :, :, None, :]  # (B, 1, nq, qb, 1, S)
+
+    ms, ls, accs = [], [], []
+    for s in range(ns):
+        lo, hi = s * chunk, min((s + 1) * chunk, S_tok)
+        if lo >= hi:
+            shape = (B, n_kv, nq, qb * g)
+            ms.append(jnp.full(shape, NEG_INF, jnp.float32))
+            ls.append(jnp.zeros(shape, jnp.float32))
+            accs.append(jnp.zeros(shape + (head_dim,), jnp.float32))
+            continue
+        sl = jnp.where(live[..., lo:hi], scores[..., lo:hi], NEG_INF)
+        m = jnp.max(sl, axis=-1)
+        m = jnp.where(m > NEG_INF / 2, m, NEG_INF)
+        p = jnp.where(live[..., lo:hi], jnp.exp(sl - m[..., None]), 0.0)
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("bkntgs,bskd->bkntgd", p,
+                         v[:, lo:hi].astype(jnp.float32))
+        ms.append(m.reshape(B, n_kv, nq, qb * g))
+        ls.append(l.reshape(B, n_kv, nq, qb * g))
+        accs.append(acc.reshape(B, n_kv, nq, qb * g, head_dim))
+    m = jnp.stack(ms, axis=3)  # (B, Hkv, NQ, S, R)
+    l = jnp.stack(ls, axis=3)
+    acc = jnp.stack(accs, axis=3)  # (B, Hkv, NQ, S, R, D)
+    return m, l, acc
 
 
 def paged_attention_partials_ref(

@@ -110,6 +110,61 @@ def attn_prefill(p: Dict, x: jax.Array, cfg: ModelConfig,
     return _out(p, o), k_pages, v_pages
 
 
+def attn_prefill_chunked(p: Dict, x: jax.Array, cfg: ModelConfig,
+                         k_pages: jax.Array, v_pages: jax.Array,
+                         tables: jax.Array, q_start: jax.Array,
+                         q_lens: jax.Array, *, window: int = 0,
+                         impl: str = "jnp",
+                         interpret: Optional[bool] = None,
+                         pages_per_block: Optional[int] = None,
+                         num_splits: Optional[int] = None,
+                         combine_mode: Optional[str] = None,
+                         backend: Optional[str] = None,
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked prefill: attend one prompt *chunk* resuming from the cached
+    prefix, writing the chunk's K/V into the existing pages.
+
+    ``x``: (B, C, d) chunk activations; ``q_start``: (B,) tokens already
+    cached (the resume position — RoPE and masks use absolute positions
+    ``q_start + i``); ``q_lens``: (B,) live tokens of this chunk (≤ C,
+    batch padding beyond).  ``tables``: (B, n_kv_shards, pages_per_shard)
+    with the rows the scheduler reserved chunk-by-chunk.
+
+    Dense layers follow the decode contract — scatter first, then the
+    prefix-aware paged attention reads prefix *and* chunk back through
+    the block table (`core_attn.prefill_attention_paged`; ``impl=
+    "pallas"`` runs the Q-block × KV-block kernel).  Sliding-window
+    layers attend first over the intact ring prefix + fresh chunk K/V,
+    then scatter (ring wraps would otherwise overwrite prefix slots the
+    chunk still needs).
+
+    Returns (out, k_pages', v_pages').
+    """
+    B, C, _ = x.shape
+    pos = (q_start[:, None].astype(jnp.int32)
+           + jnp.arange(C, dtype=jnp.int32)[None])
+    q, k, v = _qkv(p, x, pos, cfg.rope_theta)
+    kv_scale = cfg.kv_scale if cfg.kv_dtype == "int8" else 0.0
+    t = tables.reshape(B, -1)
+    if window > 0:
+        o = core_attn.prefill_attention_windowed_chunk(
+            q, k, v, k_pages, v_pages, t, q_start, q_lens,
+            window=window, kv_scale=kv_scale)
+        k_pages, v_pages = kvcache.write_layer_prefill_at(
+            k_pages, v_pages, t, kv_quant(cfg, k), kv_quant(cfg, v),
+            q_start, q_lens, window=window)
+    else:
+        k_pages, v_pages = kvcache.write_layer_prefill_at(
+            k_pages, v_pages, t, kv_quant(cfg, k), kv_quant(cfg, v),
+            q_start, q_lens)
+        o = core_attn.prefill_attention_paged(
+            q, k_pages, v_pages, t, q_start + q_lens, q_start,
+            impl=impl, interpret=interpret, kv_scale=kv_scale,
+            pages_per_block=pages_per_block, num_splits=num_splits,
+            combine_mode=combine_mode, backend=backend)
+    return _out(p, o), k_pages, v_pages
+
+
 def attn_decode(p: Dict, x: jax.Array, cfg: ModelConfig,
                 k_pages: jax.Array, v_pages: jax.Array, tables: jax.Array,
                 positions: jax.Array, *, window: int = 0,

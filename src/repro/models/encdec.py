@@ -182,6 +182,72 @@ class EncDecModel:
             axis=1)[:, 0]
         return layers.unembed(params["embed"], last, cfg), st
 
+    def prefill_chunk(self, params: Dict, tokens: jax.Array, state: Dict,
+                      q_start: jax.Array, q_lens: jax.Array,
+                      extra: Optional[Dict] = None, impl: str = "jnp",
+                      interpret: Optional[bool] = None,
+                      pages_per_block: Optional[int] = None,
+                      num_splits: Optional[int] = None,
+                      combine_mode: Optional[str] = None,
+                      backend: Optional[str] = None
+                      ) -> Tuple[jax.Array, Dict]:
+        """Chunked decoder prefill (same contract as
+        `TransformerModel.prefill_chunk`): the chunk's self-attention
+        resumes from the cached prefix pages at ``q_start``.  The audio
+        encoder and per-layer cross-attention K/V depend only on the
+        frames; when NO row of the sub-batch is at chunk 0 they are
+        skipped entirely and the cached ``state["cross_k"/"cross_v"]``
+        reused.  The gate is batch-wide (a first-chunk row re-encodes the
+        whole sub-batch — idempotent, resume rows get identical values),
+        so under continuous admissions the encoder still runs about once
+        per admission rather than once per chunk; per-row gating without
+        dynamic shapes is an open refinement.  Host-driven (eager)
+        dispatch."""
+        cfg = self.cfg
+        B, C = tokens.shape
+        reuse_cross = ("cross_k" in state
+                       and bool(jnp.all(q_start > 0)))
+        enc = (None if reuse_cross
+               else self.encode(params, extra["frames"], impl))
+        pos = (q_start[:, None].astype(jnp.int32)
+               + jnp.arange(C, dtype=jnp.int32)[None])
+        x = layers.embed_tokens(params["embed"], tokens)
+        x = x + layers.sinusoidal_at(pos, cfg.d_model).astype(x.dtype)
+
+        st = dict(state)
+        new_k, new_v, new_ck, new_cv = [], [], [], []
+        for li in range(cfg.n_layers):
+            p = jax.tree_util.tree_map(lambda a: a[li], params["dec"])
+            h = layers.apply_norm(p["ln1"], x)
+            o, kp, vp = attn.attn_prefill_chunked(
+                p["self_attn"], h, cfg, st["k_pages"][li], st["v_pages"][li],
+                st["tables"], q_start, q_lens, impl=impl,
+                interpret=interpret, pages_per_block=pages_per_block,
+                num_splits=num_splits, combine_mode=combine_mode,
+                backend=backend)
+            new_k.append(kp)
+            new_v.append(vp)
+            x = x + o
+            h = layers.apply_norm(p["lnx"], x)
+            if reuse_cross:
+                ck, cv = state["cross_k"][li], state["cross_v"][li]
+            else:
+                ck, cv = attn.cross_kv(p["cross_attn"], enc)
+            new_ck.append(ck)
+            new_cv.append(cv)
+            x = x + attn.cross_attn(p["cross_attn"], h, ck, cv, cfg)
+            x = x + layers.apply_mlp(p["mlp"],
+                                     layers.apply_norm(p["ln2"], x), cfg)
+
+        st.update(k_pages=jnp.stack(new_k), v_pages=jnp.stack(new_v),
+                  cross_k=jnp.stack(new_ck), cross_v=jnp.stack(new_cv),
+                  pos=q_start + q_lens)
+        x = layers.apply_norm(params["ln_f"], x)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(q_lens - 1, 0)[:, None, None].astype(jnp.int32),
+            axis=1)[:, 0]
+        return layers.unembed(params["embed"], last, cfg), st
+
     def decode_step(self, params: Dict, tokens: jax.Array, state: Dict,
                     impl: str = "ref", attn_ctx: Optional[Dict] = None,
                     interpret: Optional[bool] = None,

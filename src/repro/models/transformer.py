@@ -335,6 +335,96 @@ class TransformerModel:
         logits = layers.unembed(params["embed"], last, cfg)
         return logits, st
 
+    def prefill_chunk(self, params: Dict, tokens: jax.Array, state: Dict,
+                      q_start: jax.Array, q_lens: jax.Array,
+                      extra: Optional[Dict] = None, impl: str = "jnp",
+                      interpret: Optional[bool] = None,
+                      pages_per_block: Optional[int] = None,
+                      num_splits: Optional[int] = None,
+                      combine_mode: Optional[str] = None,
+                      backend: Optional[str] = None
+                      ) -> Tuple[jax.Array, Dict]:
+        """Chunked prefill: one prompt *chunk* per sequence, resuming from
+        the cached prefix.
+
+        ``tokens``: (B, C) chunk tokens (right-padded); ``q_start``: (B,)
+        tokens already cached (the resume position — positions, masks and
+        the K/V scatter all use absolute ``q_start + i``); ``q_lens``:
+        (B,) live tokens of this chunk.  ``state["tables"]`` must already
+        map pages covering ``q_start + q_lens`` tokens (the scheduler
+        reserves chunk-by-chunk).  Returns the logits of each chunk's
+        last live token (the next-token logits when this is the final
+        chunk) and the updated state.  ``prefill(tokens, lens)`` is the
+        single-chunk special case (``q_start = 0``, ``q_lens = lens``).
+
+        Recurrent codes (R/M/S) are not chunkable — their prefill state
+        replay assumes the whole prompt; the engine gates them out.
+        """
+        cfg = self.cfg
+        codes = cfg.pattern()
+        if any(c in REC_CODES for c in codes):
+            raise NotImplementedError(
+                "chunked prefill does not support recurrent layers "
+                f"(pattern {cfg.layer_pattern!r})")
+        B, C = tokens.shape
+        # cross-attention K/V depend only on the image context: when no
+        # row is at chunk 0, skip the projection and reuse the cached
+        # state["cross_k"/"cross_v"].  Batch-wide gate — a first-chunk
+        # row recomputes every row (idempotent for resume rows), so the
+        # cost recurs per admission, not per chunk.  Host-driven (the
+        # engine calls this eagerly), hence the concrete bool().
+        reuse_cross = ("cross_k" in state
+                       and bool(jnp.all(q_start > 0)))
+        if not reuse_cross:
+            extra = self._project_extra(params, extra)
+        x = layers.embed_tokens(params["embed"], tokens)
+
+        st = dict(state)
+        ai = ci = 0
+        new_k, new_v, new_ck, new_cv = [], [], [], []
+        layer_params = self._per_layer_params(params)
+        for li, code in enumerate(codes):
+            p = layer_params[li]
+            h = layers.apply_norm(p["ln1"], x)
+            if code in ATTN_CODES:
+                w = cfg.window if code == "W" else 0
+                o, kp, vp = attn.attn_prefill_chunked(
+                    p["attn"], h, cfg, st["k_pages"][ai], st["v_pages"][ai],
+                    st["tables"], q_start, q_lens, window=w, impl=impl,
+                    interpret=interpret, pages_per_block=pages_per_block,
+                    num_splits=num_splits, combine_mode=combine_mode,
+                    backend=backend)
+                new_k.append(kp)
+                new_v.append(vp)
+                ai += 1
+                x = x + o
+            elif code == "C":
+                if reuse_cross:
+                    ck, cv = st["cross_k"][ci], st["cross_v"][ci]
+                else:
+                    ck, cv = attn.cross_kv(p["attn"], extra["image_embeds"])
+                new_ck.append(ck)
+                new_cv.append(cv)
+                ci += 1
+                x = x + jnp.tanh(p["gate"]) * attn.cross_attn(
+                    p["attn"], h, ck, cv, cfg)
+            x, _ = self._apply_ffn(p, x)
+
+        if self.n_attn_layers:
+            st["k_pages"] = jnp.stack(new_k)
+            st["v_pages"] = jnp.stack(new_v)
+        if self.n_cross_layers:
+            st["cross_k"] = jnp.stack(new_ck)
+            st["cross_v"] = jnp.stack(new_cv)
+        st["pos"] = q_start + q_lens
+
+        x = layers.apply_norm(params["ln_f"], x)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(q_lens - 1, 0)[:, None, None].astype(jnp.int32),
+            axis=1)[:, 0]
+        logits = layers.unembed(params["embed"], last, cfg)
+        return logits, st
+
     def prefill_scanned(self, params: Dict, tokens: jax.Array, state: Dict,
                         lens: Optional[jax.Array] = None,
                         extra: Optional[Dict] = None, impl: str = "jnp",

@@ -51,6 +51,12 @@ class Engine:
         backend: Optional[str] = None,  # kernel lowering: "tpu" | "gpu"
         # (None → auto from jax.default_backend(); CPU hosts fall back to
         # the TPU lowering in interpret mode)
+        prefill_chunk: Optional[int] = None,  # tokens of prompt prefilled
+        # per engine step (None = whole prompt in one monolithic pass).
+        # Chunked prefill bounds per-step work: prompts cache
+        # `prefill_chunk` tokens per iteration, interleaved with decode
+        # steps for the running batch (vLLM-style continuous batching),
+        # resuming from the already-cached prefix pages each step.
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -64,6 +70,19 @@ class Engine:
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.paged = cfg.paged_attention if paged is None else paged
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1 (or None)")
+            if not self.paged:
+                raise ValueError("chunked prefill requires the paged "
+                                 "engine (paged=True)")
+            codes = cfg.pattern() if cfg.family != "encdec" else ""
+            if any(c in "RMS" for c in codes):
+                raise ValueError(
+                    "chunked prefill does not support recurrent layers "
+                    f"(pattern {cfg.layer_pattern!r}): their prefill "
+                    "state replay assumes the whole prompt")
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.rng, init_rng = jax.random.split(rng)
         self.params = (params if params is not None
@@ -71,8 +90,17 @@ class Engine:
 
         ps = cfg.page_size
         window = getattr(self.model, "window", 0)
-        if window > 0:
+        codes = cfg.pattern() if cfg.family != "encdec" else "A"
+        # ring-sized tables are only sound when EVERY attention layer is
+        # windowed: a mixed dense/windowed pattern's 'A' layers carry live
+        # KV for the whole sequence, so their table must span max_seq_len
+        # (the 'W' layers keep using columns 0..ring-1 as the ring).
+        self._ring_tables = window > 0 and "A" not in codes
+        if self._ring_tables:
             self.pages_per_seq = -(-window // ps) + 1
+        elif window > 0:
+            self.pages_per_seq = max(-(-max_seq_len // ps),
+                                     -(-window // ps) + 1)
         else:
             self.pages_per_seq = -(-max_seq_len // ps)
         if pool_tokens is None:
@@ -82,7 +110,8 @@ class Engine:
         self.num_pages = num_pages
 
         self.mgr = HostPageManager(num_pages, ps)
-        self.scheduler = Scheduler(self.mgr, max_slots, max_seq_len)
+        self.scheduler = Scheduler(self.mgr, max_slots, max_seq_len,
+                                   prefill_chunk=prefill_chunk)
         self.state = self._init_state()
         self._slot_extra: Dict[int, Dict] = {}
         self.steps = 0
@@ -161,16 +190,30 @@ class Engine:
     def step(self) -> List[Request]:
         """One engine iteration: admit → prefill → decode → sample → finish.
 
+        Monolithic mode (``prefill_chunk=None``) prefills every admitted
+        prompt whole.  Chunked mode interleaves: each PREFILLING request
+        caches one ``prefill_chunk``-token installment (resuming from its
+        cached pages) and the RUNNING sub-batch decodes one token — both
+        sub-batches advance in the same iteration, so no step's cost
+        scales with a full prompt length.  Sampling fires only when a
+        request's *last* chunk lands.
+
         Returns requests that finished this step.
         """
         self.steps += 1
         admitted = self.scheduler.admit()
         finished: List[Request] = []
-        if admitted:
-            self._prefill(admitted)
-            # the prefill's sampled token may already hit EOS / max_new
+        if self.prefill_chunk is None:
+            if admitted:
+                self._prefill(admitted)
+                # prefill's sampled token may already hit EOS / max_new
+                finished += self._finish_done()
+        elif any(r.status is Status.PREFILLING
+                 for r in self.scheduler.running.values()):
+            self._prefill_chunk_step()
             finished += self._finish_done()
-        if self.scheduler.running:
+        if any(r.status is Status.RUNNING
+               for r in self.scheduler.running.values()):
             if self.paged:
                 self.scheduler.extend_for_decode()
             self._decode()
@@ -178,10 +221,34 @@ class Engine:
         return finished
 
     # ------------------------------------------------------------------
-    def _tables_array(self) -> jnp.ndarray:
+    def _tables_array(self, decode: bool = False) -> jnp.ndarray:
+        """Block tables for the batch, one row per live slot.
+
+        ``decode=True`` blanks PREFILLING slots (their rows stay -1): the
+        decode pass must neither write its placeholder token into, nor
+        attend over, a half-prefilled sequence's pages.
+
+        A dense sequence whose page row outgrows the device table width is
+        a hard error — silently truncating ``row[:pages_per_seq]`` would
+        drop the KV tail and produce wrong output with no signal.
+        (Pure-windowed models are the exception by design: their row is a
+        ring and ``row[:ring]`` IS the table — ring slots are overwritten
+        in place, so extra host-side pages never carry live data.  Mixed
+        dense/windowed patterns get a full-width table and no exemption.)
+        """
         t = np.full((self.max_slots, 1, self.pages_per_seq), -1, np.int32)
+        windowed = self._ring_tables
         for slot, req in self.scheduler.running.items():
+            if decode and req.status is not Status.RUNNING:
+                continue
             row = self.mgr.tables.get(req.rid, [])
+            if len(row) > self.pages_per_seq and not windowed:
+                raise RuntimeError(
+                    f"request {req.rid} holds {len(row)} pages but the "
+                    f"device block table is {self.pages_per_seq} pages wide "
+                    f"(max_seq_len={self.max_seq_len}); the sequence "
+                    f"outgrew the engine — refusing to truncate its KV "
+                    f"tail silently")
             t[slot, 0, :len(row)] = row[:self.pages_per_seq]
         return jnp.asarray(t)
 
@@ -234,6 +301,109 @@ class Engine:
 
         self._sample_and_append(reqs, logits, first=True)
 
+    def _prefill_chunk_step(self) -> None:
+        """Advance every PREFILLING request by one ``prefill_chunk``
+        installment (chunked continuous batching).
+
+        Each selected request's next chunk is reserved chunk-wise
+        (`Scheduler.grow_prefill`); a request whose chunk cannot get pages
+        stalls this step and resumes from its cached pages (``mgr.lens``)
+        later — no recompute.  The sub-batch is padded to the longest live
+        chunk (≤ ``prefill_chunk``), so per-step prefill work is bounded
+        regardless of prompt length.  When a request's last chunk lands it
+        flips to RUNNING and its first token is sampled from the chunk's
+        last-position logits.
+        """
+        chunk = self.prefill_chunk
+        sel: List[Tuple[int, Request, int, int]] = []
+        for slot in sorted(self.scheduler.running):
+            # re-fetch per iteration: grow_prefill below may preempt a
+            # PREFILLING victim in a slot this (snapshotted) loop has not
+            # visited yet — indexing the snapshot would KeyError
+            req = self.scheduler.running.get(slot)
+            if req is None or req.status is not Status.PREFILLING:
+                continue
+            if not self.scheduler.grow_prefill(req):
+                continue  # stalled: keeps pages, resumes next step
+            start = req.prefill_pos
+            q_len = min(chunk, req.total_len - start)
+            sel.append((slot, req, start, q_len))
+        # grow_prefill may preempt victims already selected — drop them
+        sel = [(s, r, st0, ql) for (s, r, st0, ql) in sel
+               if self.scheduler.running.get(s) is r]
+        if not sel:
+            return
+        # fixed (max_slots, prefill_chunk) sub-batch shape: padding rows
+        # are dead (tables -1, q_lens 0) so every chunk step traces the
+        # same shapes — no per-shape eager-compile stalls on the serving
+        # hot path from ragged final chunks or varying batch occupancy
+        C = chunk
+        B = self.max_slots
+        batch = np.zeros((B, C), np.int32)
+        q_lens = np.zeros((B,), np.int32)
+        starts = np.zeros((B,), np.int32)
+        slots = [s for s, _, _, _ in sel]
+        reqs = [r for _, r, _, _ in sel]
+        for i, (_, req, st0, ql) in enumerate(sel):
+            seq = req.prompt + req.output
+            batch[i, :ql] = seq[st0:st0 + ql]
+            starts[i] = st0
+            q_lens[i] = ql
+        # padding rows pose as resumes (q_start=1, q_lens=0): they are
+        # dead either way, but must not look like first chunks — a row at
+        # chunk 0 forces the model to recompute cross-attention K/V
+        starts[len(sel):] = 1
+
+        full_tables = self._tables_array()
+        sub_tables = np.full((B,) + full_tables.shape[1:], -1, np.int32)
+        sub_tables[:len(slots)] = np.asarray(full_tables)[np.asarray(slots)]
+
+        st = self.state
+        sub_state: Dict[str, Any] = {
+            "pos": jnp.asarray(starts),
+            "k_pages": st["k_pages"],
+            "v_pages": st["v_pages"],
+            "tables": jnp.asarray(sub_tables),
+        }
+        for key in ("cross_k", "cross_v"):
+            if key in st:
+                # resume rows reuse their cached cross-K/V (the model
+                # skips the encoder/projection when no row is at chunk 0)
+                sub = np.zeros((st[key].shape[0], B) + st[key].shape[2:],
+                               st[key].dtype)
+                sub[:, :len(slots)] = np.asarray(st[key])[:, np.asarray(slots)]
+                sub_state[key] = jnp.asarray(sub)
+        extra = self._collect_extra(reqs, pad_to=B)
+        logits, new_st = self.model.prefill_chunk(
+            self.params, jnp.asarray(batch), sub_state,
+            q_start=jnp.asarray(starts), q_lens=jnp.asarray(q_lens),
+            extra=extra, impl=self.impl, interpret=self.interpret,
+            pages_per_block=self.pages_per_block,
+            num_splits=self.num_splits, combine_mode=self.combine_mode,
+            backend=self.backend)
+
+        st["k_pages"] = new_st["k_pages"]
+        st["v_pages"] = new_st["v_pages"]
+        idx = jnp.asarray(slots)
+        live = np.arange(len(slots))
+        st["pos"] = st["pos"].at[idx].set(
+            jnp.asarray((starts + q_lens)[live]))
+        for key in ("cross_k", "cross_v"):
+            if key in new_st:
+                st[key] = st[key].at[:, idx].set(new_st[key][:, live])
+
+        done_rows, done_reqs = [], []
+        for i, (_, req, st0, ql) in enumerate(sel):
+            req.prefill_pos = st0 + ql
+            if req.prefill_pos >= req.total_len:  # last chunk landed
+                req.status = Status.RUNNING
+                done_rows.append(i)
+                done_reqs.append(req)
+        if done_reqs:
+            self._sample_and_append(
+                done_reqs, jnp.asarray(logits)[np.asarray(done_rows)],
+                first=True)
+
     def _prefill_contiguous(self, slots, batch, lens, extra, reqs):
         """Baseline prefill: run forward, copy K/V into max-length buffers."""
         # teacher-forced forward to get K/V per layer is implicit: reuse the
@@ -272,8 +442,11 @@ class Engine:
                 lambda g, s: g.at[:, idx].set(s), st["rec"], new_st["rec"])
         self._sample_and_append(reqs, logits, first=True)
 
-    def _collect_extra(self, reqs: List[Request]) -> Optional[Dict]:
+    def _collect_extra(self, reqs: List[Request],
+                       pad_to: Optional[int] = None) -> Optional[Dict]:
         extras = [r.metrics.get("_extra") for r in reqs]
+        if pad_to is not None:
+            extras += [None] * (pad_to - len(extras))
         if not any(e for e in extras):
             return None
         keys = next(e for e in extras if e).keys()
@@ -299,11 +472,15 @@ class Engine:
     def _decode(self) -> None:
         st = dict(self.state)
         if self.paged and "k_pages" in st:
-            st["tables"] = self._tables_array()
+            # decode=True blanks PREFILLING slots: their pages must not
+            # receive the placeholder token's K/V nor be attended over
+            st["tables"] = self._tables_array(decode=True)
         tokens = np.zeros((self.max_slots,), np.int32)
         live = np.zeros((self.max_slots,), bool)
         reqs: List[Optional[Request]] = [None] * self.max_slots
         for slot, req in self.scheduler.running.items():
+            if req.status is not Status.RUNNING:
+                continue  # mid-prefill: not in the decode sub-batch
             seq = req.prompt + req.output
             tokens[slot] = seq[-1]
             live[slot] = True
@@ -373,6 +550,8 @@ class Engine:
     def _finish_done(self) -> List[Request]:
         done = []
         for req in list(self.scheduler.running.values()):
+            if req.status is not Status.RUNNING:
+                continue  # mid-prefill requests have no fresh sample
             hit_eos = (req.eos_id is not None and req.output
                        and req.output[-1] == req.eos_id)
             if len(req.output) >= req.max_new_tokens or hit_eos:
@@ -397,6 +576,11 @@ class Engine:
         if src.status != Status.RUNNING or not self.paged:
             raise ValueError("fork requires a RUNNING request on the "
                              "paged engine")
+        if src.total_len + max_new_tokens > self.max_seq_len:
+            # the same cap add_request enforces — without it the child's
+            # page row outgrows the device table width mid-decode and
+            # `_tables_array` (rightly) refuses to truncate it
+            raise ValueError("fork child exceeds engine max_seq_len")
         slots = self.scheduler.free_slots()
         if not slots:
             raise RuntimeError("no free slot for fork")

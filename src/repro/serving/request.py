@@ -12,6 +12,7 @@ _ids = itertools.count()
 
 class Status(enum.Enum):
     WAITING = "waiting"        # queued, no pages reserved
+    PREFILLING = "prefilling"  # in the batch, prompt caching chunk-by-chunk
     RUNNING = "running"        # in the decode batch
     PREEMPTED = "preempted"    # pages reclaimed; will re-prefill
     FINISHED = "finished"
@@ -28,7 +29,8 @@ class Request:
     # set by the engine
     rid: int = field(default_factory=lambda: next(_ids))
     status: Status = Status.WAITING
-    slot: int = -1                     # batch slot while RUNNING
+    slot: int = -1                     # batch slot while RUNNING/PREFILLING
+    prefill_pos: int = 0               # tokens cached so far (chunked prefill)
     output: List[int] = field(default_factory=list)
     parent: Optional[int] = None       # prefix-shared parent request id
     metrics: Dict[str, float] = field(default_factory=dict)

@@ -1,4 +1,19 @@
-"""Token sampling: greedy / temperature / top-k / top-p, batched + jit-able."""
+"""Token sampling: greedy / temperature / top-k / top-p, batched + jit-able.
+
+Top-p (nucleus) boundary contract — pinned by ``tests/test_sampler.py``:
+the kept set is the **smallest** prefix of the probability-sorted vocab
+whose cumulative mass is ``>= p``, i.e. the token whose cumulative sum
+*crosses* ``p`` is **included** (token ``i`` survives iff the mass strictly
+before it is ``< p``).  Consequences:
+
+  * ``p`` exactly on a cumulative step keeps exactly that prefix (mass
+    == p), nothing more;
+  * ``p = 1.0`` disables the filter (every token kept);
+  * ``p -> 0`` keeps only the argmax (the first token always crosses);
+  * tokens *tied in logit* with the crossing token are also kept (the
+    cutoff is by value, so a tie cannot be split arbitrarily by sort
+    order) — the kept mass is then minimal among value-respecting sets.
+"""
 
 from __future__ import annotations
 
@@ -14,30 +29,35 @@ class SampleParams(NamedTuple):
     top_p: jax.Array  # (B,) f32; 1.0 => off
 
 
+def top_k_mask(lg: jax.Array, k: jax.Array) -> jax.Array:
+    """(V,) logits → logits with everything below the k-th largest at -inf
+    (``k <= 0`` disables).  Ties with the k-th value are kept."""
+    V = lg.shape[0]
+    kth = jnp.sort(lg)[::-1][jnp.clip(k - 1, 0, V - 1)]
+    return jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
+
+
+def top_p_mask(lg: jax.Array, p: jax.Array) -> jax.Array:
+    """(V,) logits → logits outside the nucleus at -inf (``p >= 1``
+    disables).  Inclusive boundary: the smallest sorted prefix with
+    cumulative probability >= p survives, *including* the crossing token
+    (see module docstring)."""
+    srt = jnp.sort(lg)[::-1]
+    probs = jax.nn.softmax(srt)
+    csum = jnp.cumsum(probs)
+    # token i kept iff mass strictly before it < p  (always keep argmax)
+    keep_sorted = jnp.concatenate([jnp.array([True]), csum[:-1] < p])
+    cutoff = jnp.min(jnp.where(keep_sorted, srt, jnp.inf))
+    return jnp.where((p < 1.0) & (lg < cutoff), -jnp.inf, lg)
+
+
 def sample(rng: jax.Array, logits: jax.Array, params: SampleParams
            ) -> jax.Array:
     """logits: (B, V) -> (B,) int32 tokens."""
     B, V = logits.shape
     logits = logits.astype(jnp.float32)
-
-    # top-k filter
-    def topk_mask(lg, k):
-        kth = jnp.sort(lg)[::-1][jnp.clip(k - 1, 0, V - 1)]
-        return jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
-
-    lg = jax.vmap(topk_mask)(logits, params.top_k)
-
-    # top-p (nucleus) filter
-    def topp_mask(lg, p):
-        srt = jnp.sort(lg)[::-1]
-        probs = jax.nn.softmax(srt)
-        csum = jnp.cumsum(probs)
-        # keep the smallest prefix with mass >= p (always keep the argmax)
-        keep_sorted = jnp.concatenate([jnp.array([True]), csum[:-1] < p])
-        cutoff = jnp.min(jnp.where(keep_sorted, srt, jnp.inf))
-        return jnp.where((p < 1.0) & (lg < cutoff), -jnp.inf, lg)
-
-    lg = jax.vmap(topp_mask)(lg, params.top_p)
+    lg = jax.vmap(top_k_mask)(logits, params.top_k)
+    lg = jax.vmap(top_p_mask)(lg, params.top_p)
 
     temp = jnp.maximum(params.temperature, 1e-6)[:, None]
     keys = jax.random.split(rng, B)

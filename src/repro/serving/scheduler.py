@@ -8,11 +8,26 @@ and which get preempted when the pool runs dry mid-decode (the paper's
 
 Policy (vLLM-style):
   * FIFO admission; a request is admitted when a batch slot is free AND the
-    pool holds its prompt pages + ``headroom`` decode pages.
+    pool holds its *first prefill installment* + ``headroom`` decode pages.
+    With ``prefill_chunk=None`` (monolithic prefill) the installment is the
+    whole prompt; with chunked prefill it is one chunk — admission reserves
+    **chunk-by-chunk** instead of all-at-front, so a 32k prompt no longer
+    head-of-line-blocks the queue on its full page count (the former code
+    reserved ``req.total_len`` pages up front even though chunked prefill
+    and ``extend_for_decode`` grow incrementally).
+  * chunked mode runs requests through a ``PREFILLING`` state: the engine
+    caches ``prefill_chunk`` prompt tokens per step (`grow_prefill`
+    reserves each next chunk) and flips the request to ``RUNNING`` when the
+    last chunk lands.  A prefill whose next chunk cannot get pages simply
+    *stalls* — it keeps its pages and resumes from ``mgr.lens`` once decode
+    traffic frees space (no recompute), unless nothing is decoding, in
+    which case the youngest other request is preempted to guarantee
+    progress.
   * every decode step may need one new page per running sequence; if the
-    pool cannot serve a needed page, the *youngest* running request is
-    preempted: its pages are freed instantly and it re-queues for a full
-    re-prefill (recompute > swap, as in vLLM's default).
+    pool cannot serve a needed page, the *youngest* live request
+    (decoding or prefilling) is preempted: its pages are freed instantly
+    and it re-queues for a full re-prefill (recompute > swap, as in
+    vLLM's default).
 """
 
 from __future__ import annotations
@@ -22,17 +37,25 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.paging import HostPageManager
 from repro.serving.request import Request, Status
 
+# states that occupy a batch slot (and hold pages)
+LIVE = (Status.RUNNING, Status.PREFILLING)
+
 
 class Scheduler:
     def __init__(self, manager: HostPageManager, max_slots: int,
-                 max_seq_len: int, headroom_pages: int = 1):
+                 max_seq_len: int, headroom_pages: int = 1,
+                 prefill_chunk: Optional[int] = None):
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1 (or None)")
         self.mgr = manager
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.headroom = headroom_pages
+        self.prefill_chunk = prefill_chunk
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}  # slot -> request
         self.preempted: int = 0
+        self.prefill_stalls: int = 0
 
     # ------------------------------------------------------------------
     def add(self, req: Request) -> None:
@@ -49,29 +72,70 @@ class Scheduler:
     def admit(self) -> List[Tuple[int, Request]]:
         """Admit waiting requests into free slots while pages allow.
 
-        Returns [(slot, request)] newly admitted (they need a prefill pass).
+        Returns [(slot, request)] newly admitted.  Monolithic mode admits
+        straight to RUNNING (the caller prefills the whole prompt);
+        chunked mode admits to PREFILLING with only the first chunk
+        reserved.
         """
         admitted = []
         slots = self.free_slots()
         while self.waiting and slots:
             req = self.waiting[0]
-            need = self._pages_for(req.total_len) + self.headroom
+            # the tokens this request's prefill must cache (preempted
+            # requests re-prefill prompt + generated-so-far)
+            target = req.total_len
+            first = (target if self.prefill_chunk is None
+                     else min(self.prefill_chunk, target))
+            need = self._pages_for(first) + self.headroom
             if need > len(self.mgr.free_list):
                 break  # head-of-line blocking keeps FIFO fairness
             self.waiting.pop(0)
             slot = slots.pop(0)
-            ok = self.mgr.reserve(req.rid, req.total_len)
+            ok = self.mgr.reserve(req.rid, first)
             assert ok, "capacity was checked above"
-            req.status = Status.RUNNING
+            req.prefill_pos = 0
+            req.status = (Status.RUNNING if self.prefill_chunk is None
+                          else Status.PREFILLING)
             req.slot = slot
             self.running[slot] = req
             admitted.append((slot, req))
         return admitted
 
-    def extend_for_decode(self) -> List[Request]:
-        """Grow every running sequence by one token; preempt on exhaustion.
+    # ------------------------------------------------------------------
+    def grow_prefill(self, req: Request) -> bool:
+        """Reserve pages for ``req``'s next prefill chunk (chunked mode).
 
-        Returns the requests preempted this step (their slots are now free).
+        Returns True when the reservation covers
+        ``min(prefill_pos + prefill_chunk, total_len)`` tokens — the
+        engine may then run the chunk.  On a dry pool the request
+        *stalls* (returns False) and resumes from its cached pages on a
+        later step — unless no other request is decoding (nothing would
+        ever free pages), in which case the youngest other live request
+        is preempted so the batch always makes progress.
+        """
+        assert self.prefill_chunk is not None, "monolithic mode"
+        want = min(req.prefill_pos + self.prefill_chunk, req.total_len)
+        if self.mgr.lens.get(req.rid, 0) >= want:
+            return True
+        while not self.mgr.reserve(req.rid, want):
+            others = [r for r in self.running.values() if r is not req]
+            if any(r.status is Status.RUNNING for r in others):
+                self.prefill_stalls += 1
+                return False  # decodes will finish (or preempt) and free
+            if not others:
+                raise RuntimeError(
+                    "page pool too small for a single sequence's prefill")
+            self._preempt(max(others, key=lambda r: r.rid))
+        return True
+
+    def extend_for_decode(self) -> List[Request]:
+        """Grow every *decoding* sequence by one token; preempt on
+        exhaustion.
+
+        Returns the requests preempted this step (their slots are now
+        free).  PREFILLING requests are not extended (their growth is
+        `grow_prefill`'s job) but they are preemption candidates like
+        everyone else — youngest first.
 
         Preemption safety: victims picked mid-loop may sit *later* in the
         iteration order, so every request is re-checked against the live
@@ -88,10 +152,10 @@ class Scheduler:
         # oldest first when extending, youngest first when picking victims
         for req in sorted(self.running.values(), key=lambda r: r.rid):
             if req.status is not Status.RUNNING or req.slot not in self.running:
-                continue  # preempted by an earlier extend — pages are freed
+                continue  # prefilling, or preempted by an earlier extend
             while not self.mgr.extend(req.rid, 1):
                 cand = [r for r in self.running.values()
-                        if r.status is Status.RUNNING and r is not req]
+                        if r.status in LIVE and r is not req]
                 if not cand:
                     raise RuntimeError(
                         "page pool too small for a single sequence")
@@ -104,6 +168,7 @@ class Scheduler:
         self.mgr.free(req.rid)
         del self.running[req.slot]
         req.slot = -1
+        req.prefill_pos = 0  # cached pages are gone: re-prefill from 0
         req.status = Status.PREEMPTED
         # preempted requests restart with prompt+generated so far as prompt
         self.waiting.insert(0, req)

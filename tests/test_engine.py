@@ -199,6 +199,46 @@ def test_fork_prefix_sharing_is_exact_and_copy_on_write():
     assert parent.output == ref2.output
 
 
+def test_tables_array_refuses_silent_truncation():
+    """ISSUE 5 satellite: a sequence whose page row outgrows the device
+    table width must be a hard error.  The former code silently did
+    ``row[:pages_per_seq]`` — the sequence attended over a dropped KV
+    tail and produced wrong output with no signal."""
+    eng = make_engine(max_slots=2, max_seq_len=32)  # pages_per_seq = 4
+    req = Request(prompt=[1] * 10, max_new_tokens=4)
+    eng.add_request(req)
+    eng.step()
+    # force the host row past the device table width (the overflow a
+    # mis-sized fork or an unchecked extend would produce)
+    assert eng.mgr.reserve(req.rid, eng.max_seq_len + 1)
+    with pytest.raises(RuntimeError, match="refusing to truncate"):
+        eng._tables_array()
+
+
+def test_tables_array_ring_models_still_truncate_by_design():
+    """Windowed models are the sanctioned exception: their row is a ring
+    and row[:ring] IS the device table (slots overwritten in place)."""
+    cfg = get_smoke("llama2-7b").replace(layer_pattern="W", window=16)
+    eng = Engine(cfg, max_slots=2, max_seq_len=64)
+    assert eng.pages_per_seq == 3  # ceil(16/8) + 1
+    req = Request(prompt=[1] * 30, max_new_tokens=4)
+    eng.add_request(req)
+    eng.step()  # host row is 4 pages > ring 3 — must NOT raise
+    t = eng._tables_array()
+    assert (t[req.slot, 0] >= 0).all()
+
+
+def test_fork_exceeding_max_seq_len_raises():
+    """The overflow path that used to reach the silent truncation: a fork
+    whose child would outgrow max_seq_len mid-decode."""
+    eng = make_engine(max_slots=3, max_seq_len=32)
+    parent = Request(prompt=[1] * 20, max_new_tokens=4)
+    eng.add_request(parent)
+    eng.step()
+    with pytest.raises(ValueError, match="max_seq_len"):
+        eng.fork_request(parent, max_new_tokens=32)
+
+
 # ---------------------------------------------------------------------------
 # scheduler unit tests
 # ---------------------------------------------------------------------------

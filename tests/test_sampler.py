@@ -1,0 +1,102 @@
+"""Sampling-filter semantics, pinned (ISSUE 5 satellite).
+
+Top-p (nucleus) boundary contract: the kept set is the smallest
+probability-sorted prefix with cumulative mass >= p — the token whose
+cumulative sum *crosses* p is INCLUDED (an exclusive mask would violate
+the nucleus definition: the kept mass could fall below p).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampler import (SampleParams, sample, top_k_mask,
+                                   top_p_mask)
+
+
+def kept(masked):
+    return set(np.where(np.isfinite(np.asarray(masked)))[0].tolist())
+
+
+def logits_for(probs):
+    return jnp.log(jnp.asarray(probs, jnp.float32))
+
+
+def test_top_p_includes_crossing_token():
+    lg = logits_for([0.5, 0.3, 0.2])
+    # p=0.6: token 1 crosses (0.5 < 0.6 <= 0.8) and must be kept
+    assert kept(top_p_mask(lg, jnp.float32(0.6))) == {0, 1}
+    # p=0.4: token 0 alone crosses
+    assert kept(top_p_mask(lg, jnp.float32(0.4))) == {0}
+    # p just above a step adds exactly one token
+    assert kept(top_p_mask(lg, jnp.float32(0.81))) == {0, 1, 2}
+
+
+def test_top_p_exactly_on_cumulative_step():
+    """p landing exactly on a cumulative step keeps exactly that prefix
+    (mass == p is already >= p — the next token must NOT be added).
+    The boundary value is taken from the mask's own cumsum so float
+    rounding cannot turn the equality into an inequality."""
+    lg = logits_for([0.5, 0.3, 0.2])
+    csum = np.cumsum(np.asarray(jax.nn.softmax(jnp.sort(lg)[::-1])))
+    p0 = jnp.float32(csum[0])  # exactly P(token 0)
+    assert kept(top_p_mask(lg, p0)) == {0}
+    p1 = jnp.float32(csum[1])  # exactly P(token 0) + P(token 1)
+    assert kept(top_p_mask(lg, p1)) == {0, 1}
+
+
+def test_top_p_one_keeps_everything():
+    lg = logits_for([0.5, 0.3, 0.15, 0.05])
+    assert kept(top_p_mask(lg, jnp.float32(1.0))) == {0, 1, 2, 3}
+
+
+def test_top_p_tiny_keeps_argmax_only():
+    lg = logits_for([0.5, 0.3, 0.2])
+    assert kept(top_p_mask(lg, jnp.float32(1e-6))) == {0}
+
+
+def test_top_p_ties_at_the_cutoff_are_kept_together():
+    """Tokens tied in logit with the crossing token survive together: the
+    cutoff is by value, so sort order cannot split a tie arbitrarily."""
+    lg = logits_for([0.5, 0.25, 0.25])
+    # p=0.6 crosses at one of the tied tokens — both stay
+    assert kept(top_p_mask(lg, jnp.float32(0.6))) == {0, 1, 2}
+
+
+def test_top_p_composes_with_top_k():
+    lg = logits_for([0.4, 0.3, 0.2, 0.1])
+    lg_k = top_k_mask(lg, jnp.int32(3))  # drop token 3
+    assert kept(lg_k) == {0, 1, 2}
+    # renormalised over the survivors: csum = 4/9, 7/9, 1 → p=0.5 keeps 2
+    assert kept(top_p_mask(lg_k, jnp.float32(0.5))) == {0, 1}
+
+
+def test_top_k_boundary_and_off():
+    lg = logits_for([0.4, 0.3, 0.2, 0.1])
+    assert kept(top_k_mask(lg, jnp.int32(1))) == {0}
+    assert kept(top_k_mask(lg, jnp.int32(4))) == {0, 1, 2, 3}
+    assert kept(top_k_mask(lg, jnp.int32(0))) == {0, 1, 2, 3}  # off
+
+
+def test_sample_respects_top_p_support():
+    """Sampled tokens never leave the nucleus (and p=1.0 still samples
+    valid ids)."""
+    logits = logits_for([0.45, 0.35, 0.15, 0.05])[None, :]
+    for p, support in ((0.5, {0, 1}), (1.0, {0, 1, 2, 3})):
+        params = SampleParams(temperature=jnp.ones((1,)),
+                              top_k=jnp.zeros((1,), jnp.int32),
+                              top_p=jnp.full((1,), p, jnp.float32))
+        toks = set()
+        for i in range(40):
+            t = sample(jax.random.PRNGKey(i), logits, params)
+            toks.add(int(t[0]))
+        assert toks <= support, (p, toks)
+
+
+def test_sample_greedy_at_zero_temperature():
+    logits = logits_for([0.1, 0.7, 0.2])[None, :]
+    params = SampleParams(temperature=jnp.zeros((1,)),
+                          top_k=jnp.zeros((1,), jnp.int32),
+                          top_p=jnp.ones((1,)))
+    assert int(sample(jax.random.PRNGKey(0), logits, params)[0]) == 1

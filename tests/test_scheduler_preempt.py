@@ -75,9 +75,11 @@ def check_allocator_invariants(mgr: HostPageManager, sched: Scheduler):
 
 def _drain_running_decode_token(sched: Scheduler):
     """Mirror the engine: every surviving RUNNING request gains the token
-    the extend reserved space for."""
+    the extend reserved space for.  (PREFILLING requests are still caching
+    their prompt — they neither extend nor sample.)"""
     for r in sched.running.values():
-        r.output.append(0)
+        if r.status is Status.RUNNING:
+            r.output.append(0)
 
 
 def test_preempted_victim_is_never_extended():
@@ -215,6 +217,173 @@ def test_preempt_fork_stress_invariants():
     assert not sched.has_work
     assert len(mgr.free_list) == mgr.num_pages
     assert all(c == 0 for c in mgr.refcount)
+
+
+def test_chunked_admission_reserves_chunkwise_not_total():
+    """ISSUE 5 satellite: admission must reserve prompt pages chunk-wise.
+    The former all-at-front reservation head-of-line-blocked the whole
+    queue on a long prompt's full page count even though chunked prefill
+    grows incrementally."""
+    # 8 pages of 8 tokens.  A 50-token prompt needs 7 pages + headroom
+    # monolithically — more than the pool ever has once anything else
+    # runs; chunk-wise it needs 1 page + headroom.
+    mono_mgr = HostPageManager(num_pages=8, page_size=8)
+    mono = Scheduler(mono_mgr, max_slots=3, max_seq_len=128)
+    chunk_mgr = HostPageManager(num_pages=8, page_size=8)
+    chunked = Scheduler(chunk_mgr, max_slots=3, max_seq_len=128,
+                        prefill_chunk=8)
+    for sched in (mono, chunked):
+        sched.add(Request(prompt=[1] * 24))  # 3 pages, admitted by both
+        sched.add(Request(prompt=[1] * 50))  # long
+        sched.add(Request(prompt=[1] * 8))   # short, behind the long one
+
+    a_mono = mono.admit()
+    # monolithic: long blocks (needs 7+1 of the 5 remaining) and FIFO
+    # blocks the short one behind it
+    assert len(a_mono) == 1
+    assert mono.waiting[0].prompt_len == 50
+    assert mono.waiting[1].status is Status.WAITING
+
+    a_chunk = chunked.admit()
+    # chunk-wise: the long prompt is admitted on one chunk's pages, so
+    # the short request behind it is admitted sooner (same step)
+    assert len(a_chunk) == 3
+    assert all(r.status is Status.PREFILLING for _, r in a_chunk)
+    check_allocator_invariants(chunk_mgr, chunked)
+
+
+def _drive_prefill_chunks(sched: Scheduler):
+    """Mirror Engine._prefill_chunk_step against the scheduler alone:
+    grow each PREFILLING request by one chunk (stall on a dry pool) and
+    flip it to RUNNING when its last chunk lands."""
+    progressed = []
+    for r in sorted(sched.running.values(), key=lambda x: x.rid):
+        if r.status is not Status.PREFILLING:
+            continue
+        if sched.running.get(r.slot) is not r:
+            continue  # preempted by an earlier grow_prefill this step
+        if not sched.grow_prefill(r):
+            continue  # stalled: keeps pages, resumes later
+        if sched.running.get(r.slot) is not r:
+            continue  # grow_prefill preempted it to make progress
+        r.prefill_pos = min(r.prefill_pos + sched.prefill_chunk,
+                            r.total_len)
+        if r.prefill_pos >= r.total_len:
+            r.status = Status.RUNNING
+            progressed.append(r)
+    return progressed
+
+
+def test_chunked_preempt_midprefill_readmit_finish_stress():
+    """ISSUE 5 satellite: the preemption stress with the chunked-prefill
+    state machine in the loop — admit (chunk-wise) → grow/stall chunks →
+    decode-extend (preempting PREFILLING victims too) → re-admit → finish
+    — asserting the same allocator invariants every step."""
+    rnd = random.Random(0xBEEF)
+    mgr = HostPageManager(num_pages=20, page_size=4)
+    sched = Scheduler(mgr, max_slots=4, max_seq_len=256, headroom_pages=1,
+                      prefill_chunk=8)
+
+    all_reqs = []
+
+    def submit(n_tokens):
+        r = Request(prompt=[1] * n_tokens,
+                    max_new_tokens=rnd.randint(4, 16))
+        all_reqs.append(r)
+        sched.add(r)
+
+    for _ in range(3):
+        submit(rnd.randint(12, 40))
+
+    preempted_midprefill = 0
+    finished = 0
+    for step in range(300):
+        if len(sched.waiting) < 2 and rnd.random() < 0.6:
+            submit(rnd.randint(12, 48))
+
+        sched.admit()
+        check_allocator_invariants(mgr, sched)
+
+        pre_prefilling = {r.rid: r.prefill_pos
+                          for r in sched.running.values()
+                          if r.status is Status.PREFILLING}
+        _drive_prefill_chunks(sched)
+        check_allocator_invariants(mgr, sched)
+
+        if any(r.status is Status.RUNNING for r in sched.running.values()):
+            victims = sched.extend_for_decode()
+            preempted_midprefill += sum(
+                1 for v in victims if v.rid in pre_prefilling)
+            _drain_running_decode_token(sched)
+            check_allocator_invariants(mgr, sched)
+
+        for r in list(sched.running.values()):
+            if r.status is Status.RUNNING and \
+                    len(r.output) >= r.max_new_tokens:
+                sched.finish(r)
+                finished += 1
+        check_allocator_invariants(mgr, sched)
+
+    # the schedule must have exercised the chunked hard paths
+    assert sched.preempted >= 3, "stress never preempted"
+    assert preempted_midprefill >= 1, \
+        "no request was ever preempted mid-prefill"
+    assert sched.prefill_stalls >= 1, "no prefill ever stalled"
+    assert finished >= 5
+
+    # a mid-prefill preemptee must re-admit from chunk 0 and finish
+    for _ in range(800):
+        if not sched.has_work:
+            break
+        sched.admit()
+        _drive_prefill_chunks(sched)
+        if any(r.status is Status.RUNNING for r in sched.running.values()):
+            sched.extend_for_decode()
+            _drain_running_decode_token(sched)
+        for r in list(sched.running.values()):
+            if r.status is Status.RUNNING and \
+                    len(r.output) >= r.max_new_tokens:
+                sched.finish(r)
+        check_allocator_invariants(mgr, sched)
+    assert not sched.has_work
+    assert all(r.status is Status.FINISHED for r in all_reqs)
+    assert len(mgr.free_list) == mgr.num_pages
+    assert all(c == 0 for c in mgr.refcount)
+
+
+def test_grow_prefill_stalls_then_resumes_without_losing_pages():
+    """A prefill stalled on a dry pool keeps its reservation (mgr.lens
+    unchanged) and continues from it — never from zero — once pages free."""
+    mgr = HostPageManager(num_pages=6, page_size=4)
+    sched = Scheduler(mgr, max_slots=2, max_seq_len=128, headroom_pages=1,
+                      prefill_chunk=8)
+    decoder = Request(prompt=[1] * 12, max_new_tokens=4)  # 3 pages
+    long_req = Request(prompt=[1] * 40, max_new_tokens=4)
+    sched.add(decoder)
+    sched.add(long_req)
+    assert len(sched.admit()) == 2
+    # decoder's prompt caches in two chunks (8 then 4): 3 pages total
+    assert sched.grow_prefill(decoder)
+    decoder.prefill_pos = 8
+    assert sched.grow_prefill(decoder)
+    decoder.prefill_pos = 12
+    decoder.status = Status.RUNNING
+
+    # admission already reserved the first chunk (8 tokens = 2 pages)
+    assert sched.grow_prefill(long_req)
+    long_req.prefill_pos = 8
+    # the next chunk (to 16 tokens = 4 pages) needs 2 pages, free is 1:
+    # stall — a RUNNING decoder will free pages, so no preemption
+    assert not sched.grow_prefill(long_req), "pool should be dry"
+    assert sched.prefill_stalls == 1
+    assert mgr.lens[long_req.rid] == 8, "stall must not touch the reservation"
+    assert long_req.status is Status.PREFILLING
+    assert sched.preempted == 0
+
+    sched.finish(decoder)  # frees 3 pages
+    assert sched.grow_prefill(long_req)
+    assert mgr.lens[long_req.rid] == 16  # resumed from 8, not from 0
+    check_allocator_invariants(mgr, sched)
 
 
 def test_cascaded_preemption_keeps_invariants():
