@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.errors import SchedulerInvariantError
+
 NULL_PAGE = jnp.int32(-1)
 
 
@@ -228,7 +230,24 @@ class HostPageManager:
         return self.reserve(seq_id, self.lens.get(seq_id, 0) + n_tokens)
 
     def free(self, seq_id: int) -> None:
-        for p in self.tables.pop(seq_id, []):
+        """Release all of ``seq_id``'s pages (refcount--; 0 => back on the
+        free list).
+
+        Double-free safe: freeing an unknown rid, or a page whose refcount
+        is already zero, raises ``SchedulerInvariantError`` instead of
+        silently corrupting the free list (the old behavior pushed the
+        page twice, so two later sequences could be handed the same
+        physical page — silent KV aliasing with no signal)."""
+        if seq_id not in self.tables:
+            raise SchedulerInvariantError(
+                f"free of unknown rid {seq_id}: no table row — double free "
+                "or never-reserved rid", rid=seq_id)
+        for p in self.tables.pop(seq_id):
+            if self.refcount[p] <= 0:
+                raise SchedulerInvariantError(
+                    f"double free of page {p} (refcount "
+                    f"{self.refcount[p]}) while releasing rid {seq_id}",
+                    rid=seq_id, page=p)
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
                 self.free_list.append(p)

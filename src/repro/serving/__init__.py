@@ -1,4 +1,9 @@
+from repro.errors import (Backpressure, DeadlineExceeded, EngineError,
+                          InternalError, InvalidRequest, NumericsError,
+                          PoolExhausted, RequestTooLong,
+                          SchedulerInvariantError, TransientDeviceError)
 from repro.serving.engine import Engine
+from repro.serving.faults import FaultPlan, FaultRule, FaultyPageManager
 from repro.serving.request import Request, Status
-from repro.serving.sampler import SampleParams, sample
+from repro.serving.sampler import SampleParams, sample, validate_sample_params
 from repro.serving.scheduler import Scheduler

@@ -25,9 +25,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.paging import HostPageManager
+from repro.errors import (EngineError, InternalError, InvalidRequest,
+                          NumericsError, PoolExhausted, RequestTooLong,
+                          SchedulerInvariantError, TransientDeviceError)
 from repro.models.api import build_model
+from repro.serving.faults import FaultPlan, FaultyPageManager
 from repro.serving.request import Request, Status
-from repro.serving.sampler import SampleParams, sample
+from repro.serving.sampler import SampleParams, sample, validate_sample_params
 from repro.serving.scheduler import Scheduler
 
 
@@ -57,6 +61,20 @@ class Engine:
         # `prefill_chunk` tokens per iteration, interleaved with decode
         # steps for the running batch (vLLM-style continuous batching),
         # resuming from the already-cached prefix pages each step.
+        # --- fault tolerance (ISSUE 6) --------------------------------
+        faults: Optional[FaultPlan] = None,  # deterministic fault
+        # injection: wraps the page manager's reserve/extend/free, the
+        # prefill/decode dispatch, and per-request sampling rows
+        numerics_guard: bool = True,  # detect NaN/Inf logits per row and
+        # fail *that* request (the rest of the batch keeps decoding)
+        max_waiting: Optional[int] = None,  # bounded wait queue
+        # (reject-on-full with Backpressure); None = unbounded
+        admit_watermark: Optional[float] = None,  # pool-utilization
+        # fraction above which new admits are shed with Backpressure
+        # instead of admitted into preemption thrash; None = off
+        max_step_retries: int = 3,  # transient-device retries per dispatch
+        retry_backoff_s: float = 0.0,  # base backoff (doubles per retry;
+        # 0 = no sleep — deterministic tests)
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -109,12 +127,20 @@ class Engine:
             num_pages = max(-(-pool_tokens // ps), self.pages_per_seq)
         self.num_pages = num_pages
 
-        self.mgr = HostPageManager(num_pages, ps)
+        self.faults = faults
+        self.numerics_guard = numerics_guard
+        self.max_step_retries = max_step_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.mgr = (FaultyPageManager(num_pages, ps, faults)
+                    if faults is not None else HostPageManager(num_pages, ps))
         self.scheduler = Scheduler(self.mgr, max_slots, max_seq_len,
-                                   prefill_chunk=prefill_chunk)
+                                   prefill_chunk=prefill_chunk,
+                                   max_waiting=max_waiting,
+                                   admit_watermark=admit_watermark)
         self.state = self._init_state()
         self._slot_extra: Dict[int, Dict] = {}
         self.steps = 0
+        self.stats: Dict[str, int] = {"transient_retries": 0}
         self._jit_decode = jax.jit(self._decode_fn, static_argnames=())
 
     # ------------------------------------------------------------------
@@ -165,12 +191,26 @@ class Engine:
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request, extra: Optional[Dict] = None) -> int:
+        """Validate and enqueue ``req``.
+
+        Raises structured errors before the request holds any resources:
+        ``InvalidRequest`` (bad sampling params), ``RequestTooLong``
+        (prompt + budget exceeds max_seq_len), or ``Backpressure`` (wait
+        queue full / pool above the admission high-watermark — carries a
+        retry hint; resubmit later).
+        """
+        validate_sample_params(req)
         if req.prompt_len + req.max_new_tokens > self.max_seq_len:
-            raise ValueError("request exceeds engine max_seq_len")
+            raise RequestTooLong(
+                f"request exceeds engine max_seq_len: prompt_len "
+                f"{req.prompt_len} + max_new_tokens {req.max_new_tokens} > "
+                f"{self.max_seq_len}", rid=req.rid,
+                limit=self.max_seq_len)
         req.metrics["t_arrive"] = time.perf_counter()
+        req.metrics["step_arrive"] = self.steps
         if extra is not None:
             req.metrics["_extra"] = extra  # modality stub embeddings
-        self.scheduler.add(req)
+        self.scheduler.add(req)  # may raise Backpressure (nothing held yet)
         return req.rid
 
     def generate(self, reqs: List[Request],
@@ -188,7 +228,8 @@ class Engine:
 
     # ------------------------------------------------------------------
     def step(self) -> List[Request]:
-        """One engine iteration: admit → prefill → decode → sample → finish.
+        """One engine iteration: deadlines → admit → prefill → decode →
+        sample → finish.
 
         Monolithic mode (``prefill_chunk=None``) prefills every admitted
         prompt whole.  Chunked mode interleaves: each PREFILLING request
@@ -198,27 +239,125 @@ class Engine:
         scales with a full prompt length.  Sampling fires only when a
         request's *last* chunk lands.
 
-        Returns requests that finished this step.
+        Fault isolation contract (gated by ``tests/test_faults.py``):
+        failures attributable to one request (NaN logits, deadline miss,
+        allocation starvation with no recourse) fail *that* request —
+        pages released, batch-mates unaffected; transient device errors
+        on a dispatch are retried with backoff; anything unstructured is
+        wrapped in ``InternalError``.  No bare exception escapes.
+
+        Returns requests that reached a terminal state this step
+        (FINISHED and FAILED; cancellations report via cancel_request).
         """
+        try:
+            return self._step_impl()
+        except EngineError:
+            raise  # structured: the caller can route it
+        except Exception as e:  # noqa: BLE001 — the wrap IS the contract
+            raise InternalError(
+                f"unstructured failure escaped engine step: {e!r}") from e
+
+    def _step_impl(self) -> List[Request]:
         self.steps += 1
+        self.scheduler.check_deadlines(self.steps)
         admitted = self.scheduler.admit()
         finished: List[Request] = []
         if self.prefill_chunk is None:
             if admitted:
-                self._prefill(admitted)
+                self._dispatch("prefill", self._prefill, admitted)
                 # prefill's sampled token may already hit EOS / max_new
                 finished += self._finish_done()
         elif any(r.status is Status.PREFILLING
                  for r in self.scheduler.running.values()):
-            self._prefill_chunk_step()
+            self._dispatch("prefill", self._prefill_chunk_step)
             finished += self._finish_done()
         if any(r.status is Status.RUNNING
                for r in self.scheduler.running.values()):
             if self.paged:
                 self.scheduler.extend_for_decode()
-            self._decode()
-            finished += self._finish_done()
+            # extend may have failed the last decoder (starvation) —
+            # re-check before dispatching an empty decode sub-batch
+            if any(r.status is Status.RUNNING
+                   for r in self.scheduler.running.values()):
+                self._dispatch("decode", self._decode)
+                finished += self._finish_done()
+        finished += self._drain_failed()
         return finished
+
+    def _dispatch(self, site: str, fn, *args):
+        """Run a prefill/decode dispatch with transient-fault retries.
+
+        The fault plan's transient site fires *before* ``fn`` mutates any
+        state, so a retry re-runs the dispatch from scratch — the same
+        recovery a real transient device error at launch time gets.
+        Backoff doubles per attempt from ``retry_backoff_s`` (0 = no
+        sleep); after ``max_step_retries`` the structured error escapes.
+        """
+        delay = self.retry_backoff_s
+        for attempt in range(self.max_step_retries + 1):
+            try:
+                if (self.faults is not None
+                        and self.faults.fire(site) == "transient"):
+                    raise TransientDeviceError(
+                        f"injected transient device error at {site} "
+                        "dispatch", site=site, attempt=attempt)
+                return fn(*args)
+            except TransientDeviceError:
+                self.stats["transient_retries"] += 1
+                if attempt >= self.max_step_retries:
+                    raise
+                if delay:
+                    time.sleep(delay)
+                    delay *= 2
+
+    def _drain_failed(self) -> List[Request]:
+        """Collect requests failed mid-step (deadline, starvation, NaN
+        guard) so ``step`` reports every terminal transition it caused."""
+        ev, self.scheduler.failed_events = self.scheduler.failed_events, []
+        now = time.perf_counter()
+        for r in ev:
+            r.metrics.setdefault("t_done", now)
+        return ev
+
+    # ------------------------------------------------------------------
+    def cancel_request(self, rid: int) -> bool:
+        """Tear down request ``rid`` in any state: WAITING (dequeued),
+        PREFILLING mid-chunk or stalled-on-dry-pool (pages + table row
+        released; no ghost row reaches the next decode sub-batch),
+        RUNNING (slot + pages released mid-decode), PREEMPTED (dequeued).
+        Returns False for unknown or already-terminal requests.  Safe
+        between steps — cancellation never disturbs batch-mates.
+        """
+        req = self._find_request(rid)
+        if req is None:
+            return False
+        if not self.scheduler.cancel(req):
+            return False
+        req.metrics.setdefault("t_done", time.perf_counter())
+        return True
+
+    def _find_request(self, rid: int) -> Optional[Request]:
+        for r in self.scheduler.waiting:
+            if r.rid == rid:
+                return r
+        for r in self.scheduler.running.values():
+            if r.rid == rid:
+                return r
+        return None
+
+    def robustness_report(self) -> Dict[str, int]:
+        """Counters for the failure surface (mirrors memory_report)."""
+        s = self.scheduler
+        return {
+            "failed": s.failed,
+            "cancelled": s.cancelled,
+            "shed": s.shed,
+            "deadline_misses": s.deadline_misses,
+            "preempted": s.preempted,
+            "prefill_stalls": s.prefill_stalls,
+            "transient_retries": self.stats["transient_retries"],
+            "fault_fires": self.faults.fires if self.faults else 0,
+        }
 
     # ------------------------------------------------------------------
     def _tables_array(self, decode: bool = False) -> jnp.ndarray:
@@ -243,7 +382,7 @@ class Engine:
                 continue
             row = self.mgr.tables.get(req.rid, [])
             if len(row) > self.pages_per_seq and not windowed:
-                raise RuntimeError(
+                raise SchedulerInvariantError(
                     f"request {req.rid} holds {len(row)} pages but the "
                     f"device block table is {self.pages_per_seq} pages wide "
                     f"(max_seq_len={self.max_seq_len}); the sequence "
@@ -533,7 +672,34 @@ class Engine:
 
     def _sample_and_append(self, reqs: List[Request], logits: jnp.ndarray,
                            first: bool) -> None:
+        logits = jnp.asarray(logits)
+        if self.faults is not None and reqs:
+            # injected NaN logits: per-row poison, caught by the guard
+            bad = [i for i, r in enumerate(reqs)
+                   if self.faults.fire("sample", rid=r.rid) == "nan"]
+            if bad:
+                logits = logits.at[jnp.asarray(bad)].set(jnp.nan)
+        if self.numerics_guard and reqs:
+            # per-row isolation: a poisoned row (overflowed activations,
+            # injected NaN) fails *its* request; survivors sample as if
+            # the bad row never existed (their logits depend only on
+            # their own KV pages, so outputs are bit-identical — gated
+            # by tests/test_faults.py)
+            finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+            if not finite.all():
+                for r, ok in zip(reqs, finite):
+                    if not ok:
+                        self.scheduler.fail(r, NumericsError(
+                            "non-finite logits in this request's row "
+                            f"(step {self.steps})", rid=r.rid,
+                            step=self.steps))
+                keep = np.where(finite)[0]
+                reqs = [reqs[i] for i in keep]
+                logits = logits[jnp.asarray(keep)]
         B = len(reqs)
+        if B == 0:
+            self.rng, _ = jax.random.split(self.rng)  # keep stream parity
+            return
         sp = SampleParams(
             temperature=jnp.asarray([r.temperature for r in reqs], jnp.float32),
             top_k=jnp.asarray([r.top_k for r in reqs], jnp.int32),
@@ -574,16 +740,18 @@ class Engine:
         shared prefix) and decodes from the parent's current position.
         """
         if src.status != Status.RUNNING or not self.paged:
-            raise ValueError("fork requires a RUNNING request on the "
-                             "paged engine")
+            raise InvalidRequest("fork requires a RUNNING request on the "
+                                 "paged engine", rid=src.rid)
         if src.total_len + max_new_tokens > self.max_seq_len:
             # the same cap add_request enforces — without it the child's
             # page row outgrows the device table width mid-decode and
             # `_tables_array` (rightly) refuses to truncate it
-            raise ValueError("fork child exceeds engine max_seq_len")
+            raise RequestTooLong("fork child exceeds engine max_seq_len",
+                                 rid=src.rid, limit=self.max_seq_len)
         slots = self.scheduler.free_slots()
         if not slots:
-            raise RuntimeError("no free slot for fork")
+            raise PoolExhausted("no free slot for fork", rid=src.rid,
+                                resource="slots")
         ps = self.cfg.page_size
         seq = src.prompt + src.output
         # Page math must follow the *cached* length (`mgr.lens`, == the
@@ -596,7 +764,8 @@ class Engine:
         full_pages = cached_len // ps
         need_tail = 1 if cached_len % ps else 0
         if need_tail + self.scheduler.headroom > len(self.mgr.free_list):
-            raise RuntimeError("no pages for fork tail")
+            raise PoolExhausted("no pages for fork tail", rid=src.rid,
+                                resource="pages")
 
         child = Request(prompt=list(seq), max_new_tokens=max_new_tokens,
                         parent=src.rid, **sampling)
@@ -608,7 +777,8 @@ class Engine:
         # this unreachable in practice, but the engine must not trust it:
         # a False here with the bumps kept would alias live pages).
         if not self.mgr.fork(src.rid, child.rid):
-            raise RuntimeError("no pages for fork tail")
+            raise PoolExhausted("no pages for fork tail", rid=src.rid,
+                                resource="pages")
         # device: copy the parent's partial tail page into the child's
         if need_tail:
             src_tail = self.mgr.tables[src.rid][full_pages]

@@ -1,4 +1,21 @@
-"""Serving request objects + lifecycle states."""
+"""Serving request objects + lifecycle states.
+
+Lifecycle (fault-tolerant serving, ISSUE 6)::
+
+                    admit                 last chunk
+    WAITING ─────────────▶ PREFILLING ───────────────▶ RUNNING ──▶ FINISHED
+       ▲  ▲ (monolithic: straight to RUNNING)            │
+       │  └──────────────── re-queue ◀── PREEMPTED ◀─────┘
+       │
+      add                 every non-terminal state may also exit to:
+                            FAILED     (structured EngineError on `error`)
+                            CANCELLED  (Engine.cancel_request)
+
+``FAILED`` / ``CANCELLED`` / ``FINISHED`` are terminal: pages, slot and
+block-table row are released on entry and the request never re-enters the
+scheduler.  ``done`` is true for all three — callers draining a wave must
+not spin on a request that can no longer make progress.
+"""
 
 from __future__ import annotations
 
@@ -16,6 +33,12 @@ class Status(enum.Enum):
     RUNNING = "running"        # in the decode batch
     PREEMPTED = "preempted"    # pages reclaimed; will re-prefill
     FINISHED = "finished"
+    FAILED = "failed"          # terminal: structured error on req.error
+    CANCELLED = "cancelled"    # terminal: torn down by cancel_request
+
+
+# terminal states: resources released, never scheduled again
+TERMINAL = (Status.FINISHED, Status.FAILED, Status.CANCELLED)
 
 
 @dataclass
@@ -26,6 +49,9 @@ class Request:
     top_k: int = 0
     top_p: float = 1.0
     eos_id: Optional[int] = None
+    # deadlines (enforced by the scheduler; miss => FAILED/DeadlineExceeded)
+    deadline_steps: Optional[int] = None       # total engine-step budget
+    ttft_deadline_steps: Optional[int] = None  # steps until first token
     # set by the engine
     rid: int = field(default_factory=lambda: next(_ids))
     status: Status = Status.WAITING
@@ -34,6 +60,7 @@ class Request:
     output: List[int] = field(default_factory=list)
     parent: Optional[int] = None       # prefix-shared parent request id
     metrics: Dict[str, float] = field(default_factory=dict)
+    error: Optional[Exception] = None  # EngineError when status is FAILED
 
     @property
     def prompt_len(self) -> int:
@@ -45,4 +72,9 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.status == Status.FINISHED
+        """Terminal — finished, failed, or cancelled (no more progress)."""
+        return self.status in TERMINAL
+
+    @property
+    def succeeded(self) -> bool:
+        return self.status is Status.FINISHED

@@ -17,10 +17,41 @@ before it is ``< p``).  Consequences:
 
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.errors import InvalidRequest
+
+
+def validate_sample_params(req) -> None:
+    """Reject out-of-domain sampling knobs at ``add_request`` time.
+
+    A negative temperature or a NaN top_p sails straight through the
+    batched ``sample`` math and poisons that row's distribution (NaN
+    probabilities => garbage tokens) several steps after admission, where
+    the cause is unrecoverable.  Validating up front turns that into a
+    structured ``InvalidRequest`` before the request holds any pages.
+    """
+    t, k, p = req.temperature, req.top_k, req.top_p
+    if not math.isfinite(t) or t < 0.0:
+        raise InvalidRequest(
+            f"temperature must be finite and >= 0, got {t}", rid=req.rid,
+            param="temperature", value=t)
+    if not (0.0 <= p <= 1.0):  # NaN fails both comparisons
+        raise InvalidRequest(
+            f"top_p must lie in [0, 1], got {p}", rid=req.rid,
+            param="top_p", value=p)
+    if k < 0:
+        raise InvalidRequest(
+            f"top_k must be >= 0 (0 disables), got {k}", rid=req.rid,
+            param="top_k", value=k)
+    if req.max_new_tokens < 1:
+        raise InvalidRequest(
+            f"max_new_tokens must be >= 1, got {req.max_new_tokens}",
+            rid=req.rid, param="max_new_tokens", value=req.max_new_tokens)
 
 
 class SampleParams(NamedTuple):

@@ -35,7 +35,9 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.paging import HostPageManager
-from repro.serving.request import Request, Status
+from repro.errors import (Backpressure, DeadlineExceeded, EngineError,
+                          PoolExhausted)
+from repro.serving.request import Request, Status, TERMINAL
 
 # states that occupy a batch slot (and hold pages)
 LIVE = (Status.RUNNING, Status.PREFILLING)
@@ -44,23 +46,74 @@ LIVE = (Status.RUNNING, Status.PREFILLING)
 class Scheduler:
     def __init__(self, manager: HostPageManager, max_slots: int,
                  max_seq_len: int, headroom_pages: int = 1,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 max_waiting: Optional[int] = None,
+                 admit_watermark: Optional[float] = None):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1 (or None)")
+        if admit_watermark is not None and not 0.0 < admit_watermark <= 1.0:
+            raise ValueError("admit_watermark must lie in (0, 1] (or None)")
         self.mgr = manager
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.headroom = headroom_pages
         self.prefill_chunk = prefill_chunk
+        # admission control (None = unbounded / off, the legacy behavior)
+        self.max_waiting = max_waiting
+        self.admit_watermark = admit_watermark
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}  # slot -> request
         self.preempted: int = 0
         self.prefill_stalls: int = 0
+        # robustness counters + the per-step failure channel the engine
+        # drains (requests failed mid-step by deadline/starvation/guard)
+        self.shed: int = 0
+        self.failed: int = 0
+        self.cancelled: int = 0
+        self.deadline_misses: int = 0
+        self.failed_events: List[Request] = []
 
     # ------------------------------------------------------------------
     def add(self, req: Request) -> None:
+        """Enqueue ``req`` — or shed it with a structured ``Backpressure``.
+
+        Two admission gates (both off by default):
+          * bounded wait queue (``max_waiting``): reject-on-full instead
+            of unbounded queue growth;
+          * pool high-watermark (``admit_watermark``): above this
+            utilisation fraction new work is shed *at the door* rather
+            than admitted into a pool where it can only thrash
+            preemptions.
+        Preemption re-queues bypass ``add`` (``_preempt`` re-inserts
+        directly): backpressure must never drop a request that already
+        made progress.
+        """
+        if (self.max_waiting is not None
+                and len(self.waiting) >= self.max_waiting):
+            self.shed += 1
+            raise Backpressure(
+                f"wait queue full ({len(self.waiting)}/{self.max_waiting})",
+                reason="queue_full", rid=req.rid,
+                retry_after_steps=max(1, len(self.waiting)),
+                queue_depth=len(self.waiting),
+                pool_util=self._pool_util())
+        util = self._pool_util()
+        if self.admit_watermark is not None and util >= self.admit_watermark:
+            self.shed += 1
+            over = self.mgr.used_pages - int(
+                self.admit_watermark * self.mgr.num_pages)
+            raise Backpressure(
+                f"pool utilisation {util:.2f} >= admission high-watermark "
+                f"{self.admit_watermark:.2f}",
+                reason="pool_watermark", rid=req.rid,
+                retry_after_steps=max(1, over),
+                queue_depth=len(self.waiting), pool_util=util)
         req.status = Status.WAITING
         self.waiting.append(req)
+
+    def _pool_util(self) -> float:
+        return (self.mgr.used_pages / self.mgr.num_pages
+                if self.mgr.num_pages else 0.0)
 
     def free_slots(self) -> List[int]:
         return [s for s in range(self.max_slots) if s not in self.running]
@@ -89,10 +142,14 @@ class Scheduler:
             need = self._pages_for(first) + self.headroom
             if need > len(self.mgr.free_list):
                 break  # head-of-line blocking keeps FIFO fairness
+            if not self.mgr.reserve(req.rid, first):
+                # the capacity check passed but the reservation was refused
+                # (injected allocation fault): leave the request at the
+                # queue head and retry next step — reserve is
+                # all-or-nothing, so nothing needs rolling back
+                break
             self.waiting.pop(0)
             slot = slots.pop(0)
-            ok = self.mgr.reserve(req.rid, first)
-            assert ok, "capacity was checked above"
             req.prefill_pos = 0
             req.status = (Status.RUNNING if self.prefill_chunk is None
                           else Status.PREFILLING)
@@ -123,8 +180,16 @@ class Scheduler:
                 self.prefill_stalls += 1
                 return False  # decodes will finish (or preempt) and free
             if not others:
-                raise RuntimeError(
-                    "page pool too small for a single sequence's prefill")
+                # nothing to stall on, nothing to preempt: this request is
+                # starved with no recourse (pool genuinely smaller than one
+                # sequence, or a persistent injected allocation fault).
+                # Fail *it* — the engine, its queue and future admits live.
+                self.fail(req, PoolExhausted(
+                    "page pool cannot serve a single sequence's prefill "
+                    f"({want} tokens) and no preemption candidate exists",
+                    rid=req.rid, want_tokens=want,
+                    free_pages=len(self.mgr.free_list)))
+                return False
             self._preempt(max(others, key=lambda r: r.rid))
         return True
 
@@ -157,8 +222,14 @@ class Scheduler:
                 cand = [r for r in self.running.values()
                         if r.status in LIVE and r is not req]
                 if not cand:
-                    raise RuntimeError(
-                        "page pool too small for a single sequence")
+                    # alone and still starved: fail this request (pages
+                    # released) instead of killing the engine — the next
+                    # admit may well fit
+                    self.fail(req, PoolExhausted(
+                        "page pool cannot extend the only live sequence "
+                        "and no preemption candidate exists", rid=req.rid,
+                        free_pages=len(self.mgr.free_list)))
+                    break
                 victim = max(cand, key=lambda r: r.rid)
                 self._preempt(victim)
                 victims.append(victim)
@@ -175,11 +246,78 @@ class Scheduler:
         self.preempted += 1
 
     def finish(self, req: Request) -> None:
-        self.mgr.free(req.rid)
-        if req.slot in self.running and self.running[req.slot] is req:
-            del self.running[req.slot]
-        req.slot = -1
+        self._remove(req)
         req.status = Status.FINISHED
+
+    # ------------------------------------------------------------------
+    # fault isolation: per-request teardown (FAILED / CANCELLED)
+    def _remove(self, req: Request) -> None:
+        """Release everything ``req`` holds: queue position, batch slot,
+        pages + block-table row.  Safe in every state (WAITING holds no
+        pages; PREEMPTED holds neither pages nor slot)."""
+        if req in self.waiting:
+            self.waiting.remove(req)
+        if self.running.get(req.slot) is req:
+            del self.running[req.slot]
+        if req.rid in self.mgr.tables:
+            self.mgr.free(req.rid)
+        req.slot = -1
+
+    def fail(self, req: Request, err: EngineError) -> None:
+        """Terminal per-request failure: resources released, structured
+        error attached, batch-mates untouched.  The engine drains
+        ``failed_events`` each step to report terminal requests."""
+        self._remove(req)
+        req.error = err
+        req.status = Status.FAILED
+        self.failed += 1
+        self.failed_events.append(req)
+
+    def cancel(self, req: Request) -> bool:
+        """Tear ``req`` down in any non-terminal state (WAITING,
+        PREFILLING mid-chunk, RUNNING, PREEMPTED, stalled-on-dry-pool).
+        Returns False if it was already terminal."""
+        if req.status in TERMINAL:
+            return False
+        self._remove(req)
+        req.status = Status.CANCELLED
+        self.cancelled += 1
+        return True
+
+    def check_deadlines(self, now_step: int) -> List[Request]:
+        """Fail every queued/live request past its step budget.
+
+        ``deadline_steps`` bounds arrival → terminal; ``ttft_deadline_steps``
+        bounds arrival → first token.  Enforcing in the scheduler (not per
+        client) means a request stuck WAITING behind backpressure, stalled
+        mid-prefill, or thrashing through preemptions is cut loose the
+        moment its budget expires — pages freed for work that can still
+        meet its deadline.
+        """
+        expired: List[Request] = []
+        for req in list(self.waiting) + list(self.running.values()):
+            start = req.metrics.get("step_arrive")
+            if start is None:
+                continue
+            waited = now_step - start
+            if (req.deadline_steps is not None
+                    and waited >= req.deadline_steps):
+                why = (f"exceeded deadline of {req.deadline_steps} engine "
+                       f"steps (waited {waited})")
+                budget = req.deadline_steps
+            elif (req.ttft_deadline_steps is not None and not req.output
+                    and waited >= req.ttft_deadline_steps):
+                why = (f"no first token within TTFT budget of "
+                       f"{req.ttft_deadline_steps} engine steps")
+                budget = req.ttft_deadline_steps
+            else:
+                continue
+            self.fail(req, DeadlineExceeded(
+                why, rid=req.rid, waited_steps=waited, budget_steps=budget,
+                status_at_expiry=req.status.value))
+            self.deadline_misses += 1
+            expired.append(req)
+        return expired
 
     @property
     def has_work(self) -> bool:

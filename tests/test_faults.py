@@ -1,0 +1,747 @@
+"""Fault-tolerant serving (ISSUE 6): error taxonomy, per-request fault
+isolation, cancellation in every lifecycle state, admission backpressure,
+deadlines, deterministic fault injection, and the chaos soak.
+
+The acceptance contract this suite gates:
+
+  * a seeded ``FaultPlan`` injecting NaN logits / allocation failure into
+    one request of a mixed prefill+decode batch fails THAT request, its
+    pages return to the free list, and the surviving requests' token
+    streams are bit-identical to the same schedule without injection;
+  * ``Engine.cancel_request`` safely tears a request down in every state
+    (WAITING, PREFILLING mid-chunk, RUNNING, PREEMPTED, stalled on a dry
+    pool) — no ghost table row reaches the next decode sub-batch;
+  * the chaos soak runs 300+ steps of random admit/cancel/fail/preempt/
+    stall under injected faults with the allocator invariants asserted
+    after every step and no unstructured exception escaping
+    ``Engine.step()``.
+
+Run via ``make test-faults`` (CI leg ``faults``).
+"""
+
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.paging import HostPageManager
+from repro.errors import (Backpressure, DeadlineExceeded, EngineError,
+                          InternalError, InvalidRequest, NumericsError,
+                          PoolExhausted, RequestTooLong,
+                          SchedulerInvariantError, TransientDeviceError)
+from repro.serving import Engine, Request, Status
+from repro.serving.faults import FaultPlan, FaultRule, FaultyPageManager
+from repro.serving.scheduler import LIVE, Scheduler
+
+from test_scheduler_preempt import check_allocator_invariants
+
+SOAK_SEED = 0xFA57  # pinned: `make test-faults` must replay exactly
+
+
+@pytest.fixture(scope="module")
+def donor():
+    """Shared params donor (model init dominates per-test cost)."""
+    cfg = get_smoke("llama2-7b")
+    eng = Engine(cfg, max_slots=1, max_seq_len=16)
+    return cfg, eng.params
+
+
+# ---------------------------------------------------------------------------
+# taxonomy + allocator hardening
+# ---------------------------------------------------------------------------
+def test_taxonomy_refines_builtin_exceptions():
+    """The structured hierarchy must not break legacy `except` clauses."""
+    assert issubclass(InvalidRequest, ValueError)
+    assert issubclass(RequestTooLong, InvalidRequest)
+    assert issubclass(PoolExhausted, RuntimeError)
+    assert issubclass(SchedulerInvariantError, RuntimeError)
+    assert issubclass(InternalError, RuntimeError)
+    for cls in (InvalidRequest, RequestTooLong, PoolExhausted,
+                NumericsError, SchedulerInvariantError, DeadlineExceeded,
+                TransientDeviceError, InternalError, Backpressure):
+        assert issubclass(cls, EngineError)
+    err = PoolExhausted("dry", rid=7, resource="pages")
+    assert err.rid == 7 and err.context["resource"] == "pages"
+    assert "rid=7" in str(err)
+
+
+def test_free_unknown_rid_raises():
+    """Satellite: freeing a rid with no table row must raise, not silently
+    no-op (the old `tables.pop(rid, [])` hid scheduler double-frees)."""
+    mgr = HostPageManager(num_pages=4, page_size=4)
+    with pytest.raises(SchedulerInvariantError, match="unknown rid"):
+        mgr.free(7)
+    # a full free cycle, then a second free of the same rid: caught
+    assert mgr.reserve(0, 6)
+    mgr.free(0)
+    with pytest.raises(SchedulerInvariantError):
+        mgr.free(0)
+    assert sorted(mgr.free_list) == list(range(4))  # no corruption
+
+
+def test_double_free_of_page_detected():
+    """Satellite: a page freed while its refcount is already 0 is the
+    free-list-corruption signature (the page would be handed out twice) —
+    must raise instead of pushing the duplicate."""
+    mgr = HostPageManager(num_pages=4, page_size=4)
+    assert mgr.reserve(0, 6)
+    stale_row = list(mgr.tables[0])
+    mgr.free(0)
+    # forge the stale row back (what a buggy scheduler would do): its
+    # pages are on the free list at refcount 0, so freeing must trip
+    mgr.tables[1] = stale_row
+    mgr.lens[1] = 6
+    with pytest.raises(SchedulerInvariantError, match="double free"):
+        mgr.free(1)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(temperature=-0.5),
+    dict(temperature=float("nan")),
+    dict(top_p=1.5),
+    dict(top_p=-0.1),
+    dict(top_p=float("nan")),
+    dict(top_k=-1),
+    dict(max_new_tokens=0),
+])
+def test_invalid_sample_params_rejected_at_add(donor, kw):
+    """Satellite: malformed sampling knobs raise a structured
+    InvalidRequest at add_request time instead of NaN-ing downstream."""
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=32)
+    req = Request(prompt=[1, 2, 3], **kw)
+    with pytest.raises(InvalidRequest):
+        eng.add_request(req)
+    assert not eng.scheduler.waiting, "rejected request must hold nothing"
+    # still a ValueError for legacy callers
+    with pytest.raises(ValueError):
+        eng.add_request(Request(prompt=[1], **kw))
+
+
+def test_request_too_long_is_structured(donor):
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=16)
+    with pytest.raises(RequestTooLong, match="max_seq_len"):
+        eng.add_request(Request(prompt=[1] * 12, max_new_tokens=8))
+
+
+# ---------------------------------------------------------------------------
+# backpressure + deadlines
+# ---------------------------------------------------------------------------
+def test_bounded_queue_sheds_with_retry_hint(donor):
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=1, max_seq_len=32,
+                 max_waiting=2)
+    eng.add_request(Request(prompt=[1] * 4, max_new_tokens=2))
+    eng.add_request(Request(prompt=[2] * 4, max_new_tokens=2))
+    with pytest.raises(Backpressure) as ei:
+        eng.add_request(Request(prompt=[3] * 4, max_new_tokens=2))
+    bp = ei.value
+    assert bp.reason == "queue_full"
+    assert bp.retry_after_steps >= 1
+    assert bp.queue_depth == 2
+    assert eng.scheduler.shed == 1
+    assert eng.robustness_report()["shed"] == 1
+
+
+def test_pool_watermark_sheds_instead_of_thrashing(donor):
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=4, max_seq_len=64,
+                 pool_tokens=64, admit_watermark=0.5)
+    eng.add_request(Request(prompt=[1] * 40, max_new_tokens=4))
+    eng.step()  # admit + prefill: well past 50% of the 64-token pool
+    util = eng.mgr.used_pages / eng.mgr.num_pages
+    assert util >= 0.5
+    with pytest.raises(Backpressure) as ei:
+        eng.add_request(Request(prompt=[2] * 8, max_new_tokens=2))
+    assert ei.value.reason == "pool_watermark"
+    assert ei.value.pool_util == pytest.approx(util)
+    assert ei.value.retry_after_steps >= 1
+    # preemption pressure was never created: shedding happened at the door
+    assert eng.scheduler.preempted == 0
+
+
+def test_deadline_exceeded_fails_request_and_spares_batchmates(donor):
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=64)
+    slow = Request(prompt=[1] * 4, max_new_tokens=40, deadline_steps=5)
+    ok = Request(prompt=[2] * 4, max_new_tokens=8)
+    eng.add_request(slow)
+    eng.add_request(ok)
+    for _ in range(40):
+        if slow.done and ok.done:
+            break
+        eng.step()
+    assert slow.status is Status.FAILED
+    assert isinstance(slow.error, DeadlineExceeded)
+    assert len(slow.output) < 40
+    assert slow.rid not in eng.mgr.tables, "expired request must free pages"
+    assert ok.status is Status.FINISHED and len(ok.output) == 8
+    assert eng.robustness_report()["deadline_misses"] == 1
+
+
+def test_ttft_deadline_cuts_stuck_prefill(donor):
+    """A request that cannot produce its first token inside the TTFT
+    budget (long chunked prefill) is failed; the short one finishes."""
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=128,
+                 prefill_chunk=4)
+    long_req = Request(prompt=[1] * 60, max_new_tokens=4,
+                       ttft_deadline_steps=4)  # needs 15 chunks: hopeless
+    short = Request(prompt=[2] * 4, max_new_tokens=6)
+    eng.add_request(long_req)
+    eng.add_request(short)
+    for _ in range(60):
+        if long_req.done and short.done:
+            break
+        eng.step()
+    assert long_req.status is Status.FAILED
+    assert isinstance(long_req.error, DeadlineExceeded)
+    assert long_req.output == []
+    assert long_req.rid not in eng.mgr.tables
+    assert short.status is Status.FINISHED
+    check_allocator_invariants(eng.mgr, eng.scheduler)
+
+
+def test_step_returns_failed_requests(donor):
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=64)
+    req = Request(prompt=[1] * 4, max_new_tokens=40, deadline_steps=2)
+    eng.add_request(req)
+    terminal = []
+    for _ in range(6):
+        terminal += eng.step()
+        if req.done:
+            break
+    assert req in terminal, "step() must report deadline failures"
+
+
+# ---------------------------------------------------------------------------
+# cancellation in every lifecycle state (satellite)
+# ---------------------------------------------------------------------------
+def test_cancel_waiting_request(donor):
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=1, max_seq_len=32)
+    first = Request(prompt=[1] * 4, max_new_tokens=6)
+    queued = Request(prompt=[2] * 4, max_new_tokens=6)
+    eng.add_request(first)
+    eng.add_request(queued)
+    eng.step()  # first admitted; queued still WAITING
+    assert queued.status is Status.WAITING
+    assert eng.cancel_request(queued.rid) is True
+    assert queued.status is Status.CANCELLED and queued.done
+    assert queued not in eng.scheduler.waiting
+    assert queued.rid not in eng.mgr.tables
+    # unknown/terminal rids: no-op, not an exception
+    assert eng.cancel_request(queued.rid) is False
+    assert eng.cancel_request(999_999) is False
+    while not first.done:
+        eng.step()
+    assert first.status is Status.FINISHED
+    assert eng.scheduler.cancelled == 1
+
+
+def test_cancel_running_request_spares_batchmates(donor):
+    """Cancelling mid-decode frees the slot+pages and leaves the
+    co-batched requests' outputs bit-identical to an uncancelled run."""
+    cfg, params = donor
+    key = jax.random.PRNGKey(9)
+    prompts = [[3 + i] * (4 + 2 * i) for i in range(3)]
+
+    ref = Engine(cfg, params=params, max_slots=3, max_seq_len=64, rng=key)
+    ref_reqs = [Request(prompt=list(p), max_new_tokens=10) for p in prompts]
+    ref.generate(ref_reqs)
+
+    eng = Engine(cfg, params=params, max_slots=3, max_seq_len=64, rng=key)
+    reqs = [Request(prompt=list(p), max_new_tokens=10) for p in prompts]
+    for r in reqs:
+        eng.add_request(r)
+    eng.step()
+    eng.step()
+    victim = reqs[1]
+    assert victim.status is Status.RUNNING
+    assert eng.cancel_request(victim.rid)
+    assert victim.status is Status.CANCELLED
+    assert victim.rid not in eng.mgr.tables
+    check_allocator_invariants(eng.mgr, eng.scheduler)
+    for _ in range(100):
+        if all(r.done for r in reqs):
+            break
+        eng.step()
+    for i in (0, 2):
+        assert reqs[i].status is Status.FINISHED
+        assert reqs[i].output == ref_reqs[i].output, (
+            "cancellation must not disturb co-batched outputs")
+    assert eng.mgr.used_pages == 0
+
+
+def test_cancel_prefilling_mid_chunk_no_ghost_row(donor):
+    """Cancel between two prefill chunks: pages released immediately and
+    the next decode sub-batch carries no ghost table row for the slot."""
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=128,
+                 prefill_chunk=4)
+    long_req = Request(prompt=[1] * 40, max_new_tokens=4)
+    short = Request(prompt=[2] * 4, max_new_tokens=12)
+    eng.add_request(long_req)
+    eng.add_request(short)
+    for _ in range(8):
+        eng.step()
+        if (long_req.status is Status.PREFILLING and long_req.prefill_pos
+                and short.status is Status.RUNNING):
+            break
+    assert long_req.status is Status.PREFILLING
+    assert 0 < long_req.prefill_pos < long_req.total_len, "mid-chunk"
+    slot = long_req.slot
+    assert eng.cancel_request(long_req.rid)
+    assert long_req.status is Status.CANCELLED
+    assert long_req.rid not in eng.mgr.tables
+    assert slot not in eng.scheduler.running
+    # the decode-facing table row for the freed slot must be blank
+    tables = np.asarray(eng._tables_array(decode=True))
+    assert (tables[slot] == -1).all(), "ghost table row after cancel"
+    check_allocator_invariants(eng.mgr, eng.scheduler)
+    while not short.done:
+        eng.step()
+    assert short.status is Status.FINISHED
+    assert len(short.output) == 12
+
+
+def test_cancel_preempted_request(donor):
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=4, max_seq_len=64,
+                 pool_tokens=96)  # oversubscribed: preemption guaranteed
+    reqs = [Request(prompt=[1] * 40, max_new_tokens=24) for _ in range(4)]
+    for r in reqs:
+        eng.add_request(r)
+    victim = None
+    for _ in range(200):
+        eng.step()
+        victim = next((r for r in reqs
+                       if r.status is Status.PREEMPTED), None)
+        if victim is not None:
+            break
+    assert victim is not None, "pressure never preempted anyone"
+    assert victim in eng.scheduler.waiting
+    assert eng.cancel_request(victim.rid)
+    assert victim.status is Status.CANCELLED
+    assert victim not in eng.scheduler.waiting
+    check_allocator_invariants(eng.mgr, eng.scheduler)
+    for _ in range(300):
+        if all(r.done for r in reqs):
+            break
+        eng.step()
+    assert all(r.done for r in reqs)
+    assert eng.mgr.used_pages == 0
+
+
+def test_cancel_stalled_on_dry_pool_unblocks_peer(donor):
+    """A prefill stalled on a dry pool is cancellable; cancelling the
+    *decoding* page-holder instead frees the pages the stalled prefill
+    was waiting on, so it resumes without recompute."""
+    cfg, params = donor
+    ps = cfg.page_size
+    # pool == one max-length sequence (8 pages): a short decoder plus a
+    # 6-page prompt cannot coexist, so b's third chunk must stall while
+    # a (RUNNING) keeps the preemption path off (stall, don't preempt)
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=8 * ps,
+                 pool_tokens=8 * ps, prefill_chunk=2 * ps)
+    a = Request(prompt=[1] * (2 * ps), max_new_tokens=2 * ps)
+    b = Request(prompt=[2] * (6 * ps), max_new_tokens=2)
+    eng.add_request(a)
+    eng.add_request(b)
+    for _ in range(12):
+        eng.step()
+        if eng.scheduler.prefill_stalls:
+            break
+    assert eng.scheduler.prefill_stalls, "pool never ran dry mid-prefill"
+    assert b.status is Status.PREFILLING
+    assert 0 < b.prefill_pos < b.total_len, "stalled mid-prompt"
+    assert eng.cancel_request(a.rid)  # free the decoder's pages
+    check_allocator_invariants(eng.mgr, eng.scheduler)
+    for _ in range(40):
+        if b.done:
+            break
+        eng.step()
+    assert b.status is Status.FINISHED, \
+        "cancel must unblock the stalled prefill"
+    assert len(b.output) == 2
+    assert eng.mgr.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+def test_fault_plan_validates_and_replays():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan([FaultRule(site="warp", kind="nan")])
+    with pytest.raises(ValueError, match="invalid at site"):
+        FaultPlan([FaultRule(site="reserve", kind="nan")])
+
+    def drive(plan):
+        out = []
+        for i in range(50):
+            out.append(plan.fire("extend", rid=i % 3))
+            out.append(plan.fire("decode"))
+        return out
+
+    rules = lambda: [FaultRule(site="extend", kind="alloc_fail", prob=0.3,
+                               times=None),
+                     FaultRule(site="decode", kind="transient", prob=0.2,
+                               times=None)]
+    a = drive(FaultPlan(rules(), seed=123))
+    b = drive(FaultPlan(rules(), seed=123))
+    c = drive(FaultPlan(rules(), seed=124))
+    assert a == b, "same seed + schedule must replay identically"
+    assert a != c
+    assert any(a), "plan never fired at these probabilities"
+
+
+def test_fault_rule_nth_and_rid_targeting():
+    plan = FaultPlan([FaultRule(site="extend", kind="alloc_fail",
+                                rid=5, nth=2)])
+    mgr = FaultyPageManager(num_pages=8, page_size=4, plan=plan)
+    assert mgr.reserve(5, 4)
+    assert mgr.reserve(6, 4)
+    assert mgr.extend(6, 1)   # other rid: rule not consulted
+    assert mgr.extend(5, 1)   # victim's 1st extend: passes
+    assert not mgr.extend(5, 1)  # 2nd: injected dry pool
+    assert mgr.extend(5, 1)   # rule exhausted (times=1): recovers
+    assert plan.log == [("extend", 5, "alloc_fail", 3)]
+    # injected failure mutated nothing: lens reflects the two successes
+    assert mgr.lens[5] == 6
+
+
+def test_injected_free_fault_is_structured(donor):
+    cfg, params = donor
+    plan = FaultPlan([FaultRule(site="free", kind="error", nth=1)])
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=32,
+                 faults=plan)
+    req = Request(prompt=[1] * 4, max_new_tokens=4)
+    eng.add_request(req)
+    eng.step()
+    with pytest.raises(SchedulerInvariantError, match="injected"):
+        eng.cancel_request(req.rid)
+
+
+# ---------------------------------------------------------------------------
+# fault isolation: the acceptance proof
+# ---------------------------------------------------------------------------
+def _mixed_batch_engines(cfg, params, plan, key):
+    """Two engines, same params/rng/schedule; one with the fault plan.
+    Batch shape: three deciders + one long prompt mid-prefill (mixed
+    prefill+decode continuous batching)."""
+    mk = lambda: ([Request(prompt=[3 + i] * (4 + 2 * i), max_new_tokens=10)
+                   for i in range(3)]
+                  + [Request(prompt=[9] * 36, max_new_tokens=4)])
+    clean_reqs, fault_reqs = mk(), mk()
+    clean = Engine(cfg, params=params, max_slots=4, max_seq_len=64,
+                   prefill_chunk=4, rng=key)
+    faulty = Engine(cfg, params=params, max_slots=4, max_seq_len=64,
+                    prefill_chunk=4, rng=key, faults=plan)
+    return clean, clean_reqs, faulty, fault_reqs
+
+
+def test_nan_injection_isolated_and_survivors_bit_identical(donor):
+    """Acceptance: NaN logits injected into one decoding request of a
+    mixed prefill+decode batch → that request FAILED (NumericsError),
+    pages back on the free list, survivors' token streams bit-identical
+    to the uninjected run."""
+    cfg, params = donor
+    key = jax.random.PRNGKey(21)
+    plan_rules = [FaultRule(site="sample", kind="nan", nth=3)]
+    clean, clean_reqs, faulty, fault_reqs = _mixed_batch_engines(
+        cfg, params, FaultPlan(plan_rules), key)
+    victim = fault_reqs[1]
+    plan_rules[0].rid = victim.rid  # rule list is owned by the plan
+
+    clean.generate(clean_reqs, max_steps=300)
+    assert all(r.status is Status.FINISHED for r in clean_reqs)
+
+    faulty.generate(fault_reqs, max_steps=300)
+    assert victim.status is Status.FAILED
+    assert isinstance(victim.error, NumericsError)
+    assert victim.error.rid == victim.rid
+    assert len(victim.output) == 2, "failed on its 3rd sample"
+    assert victim.rid not in faulty.mgr.tables, "pages must be released"
+    for i in (0, 2, 3):
+        assert fault_reqs[i].status is Status.FINISHED
+        assert fault_reqs[i].output == clean_reqs[i].output, (
+            f"survivor {i} diverged from the uninjected run")
+    assert faulty.mgr.used_pages == 0
+    assert sorted(faulty.mgr.free_list) == list(range(faulty.num_pages))
+    assert all(c == 0 for c in faulty.mgr.refcount)
+    assert faulty.robustness_report()["failed"] == 1
+    assert faulty.faults.log[0][:3] == ("sample", victim.rid, "nan")
+
+
+def test_alloc_failure_injection_recovers_transparently(donor):
+    """Acceptance (allocation-failure half): a forced extend failure on
+    one request triggers the normal dry-pool recovery (preempt + replay)
+    and every request's output still matches the uninjected run."""
+    cfg, params = donor
+    key = jax.random.PRNGKey(22)
+    plan_rules = [FaultRule(site="extend", kind="alloc_fail", nth=2)]
+    clean, clean_reqs, faulty, fault_reqs = _mixed_batch_engines(
+        cfg, params, FaultPlan(plan_rules), key)
+    victim = fault_reqs[0]
+    plan_rules[0].rid = victim.rid
+
+    clean.generate(clean_reqs, max_steps=300)
+    faulty.generate(fault_reqs, max_steps=300)
+    assert faulty.faults.fires == 1, "injection never hit"
+    # graceful degradation: the injected dry pool preempted someone (and
+    # recompute made it transparent) — nobody failed
+    assert faulty.scheduler.preempted >= 1
+    assert faulty.robustness_report()["failed"] == 0
+    for rc, rf in zip(clean_reqs, fault_reqs):
+        assert rf.status is Status.FINISHED
+        assert rf.output == rc.output
+    assert faulty.mgr.used_pages == 0
+
+
+def test_transient_device_error_retried_to_identical_output(donor):
+    cfg, params = donor
+    key = jax.random.PRNGKey(23)
+    clean = Engine(cfg, params=params, max_slots=2, max_seq_len=48, rng=key)
+    c = Request(prompt=[5] * 6, max_new_tokens=8)
+    clean.generate([c])
+
+    plan = FaultPlan([FaultRule(site="decode", kind="transient", nth=3)])
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=48, rng=key,
+                 faults=plan)
+    r = Request(prompt=[5] * 6, max_new_tokens=8)
+    eng.generate([r])
+    assert eng.stats["transient_retries"] == 1
+    assert r.status is Status.FINISHED
+    assert r.output == c.output, "retried step must be transparent"
+
+
+def test_transient_retries_exhaust_to_structured_error(donor):
+    cfg, params = donor
+    plan = FaultPlan([FaultRule(site="decode", kind="transient", prob=1.0,
+                                times=None)])
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=48,
+                 faults=plan, max_step_retries=2)
+    req = Request(prompt=[5] * 6, max_new_tokens=4)
+    eng.add_request(req)
+    # monolithic prefill + decode share a step: the prefill lands the
+    # first token, then the decode dispatch exhausts its retries
+    with pytest.raises(TransientDeviceError):
+        eng.step()
+    assert eng.stats["transient_retries"] == 3  # 1 try + 2 retries
+    assert len(req.output) == 1, "prefill's token must survive the fault"
+    # the engine survives: clearing the (dispatch-site) plan lets the
+    # same request finish untouched
+    eng.faults = None
+    for _ in range(10):
+        if req.done:
+            break
+        eng.step()
+    assert req.status is Status.FINISHED
+
+
+def test_unstructured_step_failure_wrapped_as_internal_error(donor):
+    cfg, params = donor
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=32)
+    eng.add_request(Request(prompt=[1] * 4, max_new_tokens=4))
+    boom = ValueError("boom")
+
+    def exploding(*a, **k):
+        raise boom
+
+    eng._decode = exploding
+    with pytest.raises(InternalError) as ei:
+        eng.step()  # prefill lands; the decode call then explodes
+    assert ei.value.__cause__ is boom
+
+
+# ---------------------------------------------------------------------------
+# chaos soak (acceptance: >= 300 steps, invariants every step)
+# ---------------------------------------------------------------------------
+def _soak_plan():
+    return FaultPlan(seed=SOAK_SEED, rules=[
+        FaultRule(site="extend", kind="alloc_fail", prob=0.02, times=None),
+        FaultRule(site="reserve", kind="alloc_fail", prob=0.01, times=None),
+        FaultRule(site="sample", kind="nan", prob=0.004, times=None),
+        FaultRule(site="decode", kind="transient", prob=0.01, times=None),
+        FaultRule(site="prefill", kind="transient", prob=0.01, times=None),
+    ])
+
+
+def test_chaos_soak_engine(donor):
+    """300+ steps of random admit/cancel under injected allocator, device
+    and numerics faults: allocator invariants after every step, engine
+    liveness after every step, only structured errors ever escape."""
+    cfg, params = donor
+    rnd = random.Random(SOAK_SEED)
+    plan = _soak_plan()
+    eng = Engine(cfg, params=params, max_slots=3, max_seq_len=64,
+                 pool_tokens=120, prefill_chunk=8, faults=plan,
+                 max_waiting=6, admit_watermark=0.95, max_step_retries=6)
+    all_reqs, shed = [], 0
+    # bounded prompt-length menu keeps eager-compile shapes finite
+    lens = (5, 9, 14, 26)
+
+    def submit():
+        nonlocal shed
+        r = Request(prompt=[1 + rnd.randrange(50)] * rnd.choice(lens),
+                    max_new_tokens=rnd.randint(2, 8),
+                    deadline_steps=(rnd.randint(15, 60)
+                                    if rnd.random() < 0.3 else None))
+        try:
+            eng.add_request(r)
+            all_reqs.append(r)
+        except Backpressure:
+            shed += 1
+
+    for _ in range(2):
+        submit()
+    structured_escapes = 0
+    for step in range(310):
+        if rnd.random() < 0.5:
+            submit()
+        live = [r for r in all_reqs if not r.done]
+        if live and rnd.random() < 0.06:
+            eng.cancel_request(rnd.choice(live).rid)
+        try:
+            eng.step()
+        except InternalError as e:
+            pytest.fail(f"wrapped internal failure in step(): {e!r} "
+                        f"(cause: {e.__cause__!r})")
+        except EngineError:
+            structured_escapes += 1  # allowed; engine must stay alive
+        except Exception as e:  # noqa: BLE001
+            pytest.fail(f"unstructured exception escaped step(): {e!r}")
+        # allocator agreement, every step
+        check_allocator_invariants(eng.mgr, eng.scheduler)
+        # engine liveness: scheduler state coherent, reports computable
+        assert all(r.status in LIVE
+                   for r in eng.scheduler.running.values())
+        assert all(r.status in (Status.WAITING, Status.PREEMPTED)
+                   for r in eng.scheduler.waiting)
+        eng.robustness_report()
+        eng.memory_report()
+
+    # drain: disable injection, let the tail finish
+    eng.faults = None
+    eng.mgr.plan = FaultPlan([])  # allocator sites off too
+    for _ in range(600):
+        if all(r.done for r in all_reqs):
+            break
+        eng.step()
+        check_allocator_invariants(eng.mgr, eng.scheduler)
+    assert all(r.done for r in all_reqs)
+    # every page home, every refcount zero
+    assert eng.mgr.used_pages == 0
+    assert sorted(eng.mgr.free_list) == list(range(eng.num_pages))
+    assert all(c == 0 for c in eng.mgr.refcount)
+    # the soak must actually have exercised the failure surface
+    # (read fires off the plan object: eng.faults was cleared for the
+    # drain, so the report's fault_fires is 0 by then)
+    rep = eng.robustness_report()
+    assert plan.fires >= 5, "plan barely fired; raise the probs"
+    assert rep["cancelled"] >= 3
+    assert rep["failed"] >= 1
+    assert shed == rep["shed"]
+    statuses = {r.status for r in all_reqs}
+    assert Status.FINISHED in statuses
+    # terminal states partition the wave — nothing is left in limbo
+    assert statuses <= {Status.FINISHED, Status.FAILED, Status.CANCELLED}
+
+
+def test_chaos_soak_scheduler_level():
+    """Model-free soak at 10x the step count: the scheduler + faulty
+    allocator alone, driving admit/grow/extend/cancel/fail/finish."""
+    rnd = random.Random(SOAK_SEED + 1)
+    plan = FaultPlan(seed=SOAK_SEED + 1, rules=[
+        FaultRule(site="extend", kind="alloc_fail", prob=0.05, times=None),
+        FaultRule(site="reserve", kind="alloc_fail", prob=0.03, times=None),
+    ])
+    mgr = FaultyPageManager(num_pages=20, page_size=4, plan=plan)
+    sched = Scheduler(mgr, max_slots=4, max_seq_len=256, headroom_pages=1,
+                      prefill_chunk=8, max_waiting=5, admit_watermark=0.98)
+    all_reqs = []
+
+    def submit():
+        r = Request(prompt=[1] * rnd.randint(6, 30),
+                    max_new_tokens=rnd.randint(3, 12),
+                    deadline_steps=(rnd.randint(20, 80)
+                                    if rnd.random() < 0.4 else None))
+        try:
+            sched.add(r)
+            r.metrics["step_arrive"] = step
+            all_reqs.append(r)
+        except Backpressure:
+            pass
+
+    step = 0
+    for step in range(3000):
+        if rnd.random() < 0.5:
+            submit()
+        sched.check_deadlines(step)
+        sched.admit()
+        check_allocator_invariants(mgr, sched)
+        for r in sorted(sched.running.values(), key=lambda x: x.rid):
+            if r.status is not Status.PREFILLING:
+                continue
+            if sched.running.get(r.slot) is not r:
+                continue
+            if sched.grow_prefill(r):
+                if sched.running.get(r.slot) is not r:
+                    continue
+                r.prefill_pos = min(r.prefill_pos + 8, r.total_len)
+                if r.prefill_pos >= r.total_len:
+                    r.status = Status.RUNNING
+        check_allocator_invariants(mgr, sched)
+        if any(r.status is Status.RUNNING for r in sched.running.values()):
+            sched.extend_for_decode()
+            for r in sched.running.values():
+                if r.status is Status.RUNNING:
+                    r.output.append(0)
+            check_allocator_invariants(mgr, sched)
+        live = [r for r in all_reqs if not r.done
+                and r.status is not Status.PREEMPTED]
+        if live and rnd.random() < 0.05:
+            sched.cancel(rnd.choice(live))
+            check_allocator_invariants(mgr, sched)
+        for r in list(sched.running.values()):
+            if (r.status is Status.RUNNING
+                    and len(r.output) >= r.max_new_tokens):
+                sched.finish(r)
+        check_allocator_invariants(mgr, sched)
+        sched.failed_events.clear()
+
+    assert sched.preempted >= 3
+    assert sched.cancelled >= 5
+    assert plan.fires >= 10
+    # drain with injection off
+    mgr.plan = FaultPlan([])
+    for step in range(step, step + 2000):
+        if not sched.has_work:
+            break
+        sched.check_deadlines(step)
+        sched.admit()
+        for r in sorted(sched.running.values(), key=lambda x: x.rid):
+            if r.status is Status.PREFILLING \
+                    and sched.running.get(r.slot) is r \
+                    and sched.grow_prefill(r) \
+                    and sched.running.get(r.slot) is r:
+                r.prefill_pos = min(r.prefill_pos + 8, r.total_len)
+                if r.prefill_pos >= r.total_len:
+                    r.status = Status.RUNNING
+        if any(r.status is Status.RUNNING for r in sched.running.values()):
+            sched.extend_for_decode()
+            for r in sched.running.values():
+                if r.status is Status.RUNNING:
+                    r.output.append(0)
+        for r in list(sched.running.values()):
+            if (r.status is Status.RUNNING
+                    and len(r.output) >= r.max_new_tokens):
+                sched.finish(r)
+        check_allocator_invariants(mgr, sched)
+    assert not sched.has_work
+    assert len(mgr.free_list) == mgr.num_pages
+    assert all(c == 0 for c in mgr.refcount)
