@@ -21,7 +21,16 @@
 #               engine steps with allocator invariants asserted every
 #               step).  Part of the tier-1 run too; its own target so CI
 #               names a robustness break.
-#   verify      test-clean + test-gpu-interpret + test-faults + bench-fast
+#   test-prefix the global prefix-cache gate: radix-trie index/attach/
+#               evict unit tests, the generalized allocator invariant
+#               (refcount == table occurrences + cache residency) under
+#               a 250-step admit/attach/evict/preempt/cancel stress, and
+#               end-to-end cache-on == cache-off output equality through
+#               chunked prefill, stalls, preemption and eviction racing
+#               admission.  Part of the tier-1 run too; its own target so
+#               CI names a prefix-cache break.
+#   verify      test-clean + test-gpu-interpret + test-faults +
+#               test-prefix + bench-fast
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -34,7 +43,7 @@ KNOWN_FAIL =
 GPU_GATE_SUITES = tests/test_kernels_paged.py tests/test_combine_conformance.py
 
 .PHONY: test test-clean test-gpu-interpret test-chunked test-faults \
-        bench-fast verify
+        test-prefix bench-fast verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -58,7 +67,13 @@ test-chunked:
 test-faults:
 	$(PY) -m pytest -x -q tests/test_faults.py
 
+# the global prefix-cache gate (radix page sharing across requests):
+# lossless-hit equality, LRU eviction, and the cache-aware allocator
+# invariants under stress.
+test-prefix:
+	$(PY) -m pytest -x -q tests/test_prefix_cache.py
+
 bench-fast:
 	$(PY) -m benchmarks.run --fast --only fig4_decode,tbl_decode_blocks,mixed_batch
 
-verify: test-clean test-gpu-interpret test-faults bench-fast
+verify: test-clean test-gpu-interpret test-faults test-prefix bench-fast

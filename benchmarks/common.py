@@ -49,3 +49,14 @@ class Table:
         for r in self.rows:
             out.append(f"{self.name}/{r[0]}," + ",".join(str(x) for x in r[1:]))
         return out
+
+
+class Tables:
+    """Aggregates several scenario tables behind run.py's csv_lines
+    contract (one bench module, multiple result tables)."""
+
+    def __init__(self, *tables):
+        self.tables = tables
+
+    def csv_lines(self) -> List[str]:
+        return [line for t in self.tables for line in t.csv_lines()]

@@ -6,15 +6,23 @@ The paper's claim (C2): with the paged KV cache, per-token latency grows
 prefix every token) it grows ~like the square (reported "exponential" —
 ~10× per doubling on their stack).  We reproduce the *scaling shapes* on
 CPU with the reduced model; absolute numbers are CPU-scale.
+
+Second axis (prefix-cache PR): the same latency-vs-context question one
+level up — TTFT for a *repeated* prompt, cold vs warm through the global
+prefix cache.  A warm hit skips the cached pages' prefill entirely, so
+warm TTFT stays ~flat in the shared-prefix length while cold TTFT grows
+with it.
 """
 
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Table, timeit
+from benchmarks.common import Table, Tables, timeit
 from repro.configs import get_smoke
 from repro.configs.base import RunConfig
 from repro.models.api import build_model
@@ -22,7 +30,46 @@ from repro.models.api import build_model
 SEQ_LENS = [128, 256, 512, 1024, 2048]
 
 
-def run(fast: bool = False, backend: str = None):
+def _prefix_cache_axis(fast: bool) -> Table:
+    """Engine-level TTFT for an identical prompt, cold vs warm."""
+    from repro.serving import Engine, Request
+
+    cfg = get_smoke("llama2-7b")
+    probe = Engine(cfg, max_slots=1, max_seq_len=8)  # params donor
+    lens = [64, 128] if fast else [64, 128, 256]
+    t = Table("fig3_prefix_cache",
+              ["prompt_len", "cold_ms", "warm_ms", "ttft_ratio",
+               "hit_tokens", "pages_saved"])
+    for L in lens:
+        eng = Engine(cfg, params=probe.params, max_slots=2,
+                     max_seq_len=L + 16, prefix_cache=True)
+
+        def ttft(tok, L=L, eng=eng):
+            r = Request(prompt=[tok] * L, max_new_tokens=2)
+            eng.add_request(r)
+            t0 = time.perf_counter()
+            while not r.output and not r.done:
+                eng.step()
+            dt = (time.perf_counter() - t0) * 1e3
+            while not r.done:
+                eng.step()
+            return dt, r
+
+        # compile both code paths off the clock (the warm resume runs a
+        # different prefill shape than the cold monolithic pass)
+        ttft(3)
+        ttft(3)
+        cold_ms, _ = ttft(5)   # distinct tokens: guaranteed cache miss
+        warm_ms, r = ttft(5)   # identical prompt: attach + suffix only
+        assert r.cached_prefix > 0, "warm run never hit the cache"
+        t.add(L, round(cold_ms, 2), round(warm_ms, 2),
+              round(cold_ms / max(warm_ms, 1e-9), 2), r.cached_prefix,
+              r.cached_prefix // cfg.page_size)
+    t.show()
+    return t
+
+
+def run(fast: bool = False, backend: str = None, prefix_cache: str = None):
     cfg = get_smoke("llama2-7b")
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
@@ -69,4 +116,6 @@ def run(fast: bool = False, backend: str = None):
     t.add("growth_x", bk, round(cN / c0, 2), round(uN / u0, 2),
           f"context x{span:.0f}")
     t.show()
-    return t
+    if prefix_cache == "off":
+        return t
+    return Tables(t, _prefix_cache_axis(fast))

@@ -32,7 +32,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import Table
+from benchmarks.common import Table, Tables
 from repro.configs import get_smoke
 from repro.errors import Backpressure, EngineError
 from repro.serving import Engine, Request
@@ -183,17 +183,58 @@ def robustness_scenario(params, cfg, fast=False):
     return t
 
 
-class _Tables:
-    """Aggregates the scenario tables behind run.py's csv_lines contract."""
+def prefix_cache_workload(params, cfg, enabled: bool, fast=False):
+    """Shared-system-prompt wave (prefix-cache PR): every request repeats
+    the same 48-token head with a distinct tail — the agent/chat serving
+    shape the global prefix cache targets.
 
-    def __init__(self, *tables):
-        self.tables = tables
+    With ``prefix_cache=True`` the first request's pages seed the radix
+    trie (progressively, mid-prefill), every later request attaches to
+    the shared head and prefills only its tail, and mean TTFT (in engine
+    steps — wall-free, so the numbers are stable) drops accordingly.
+    The cache-off row is the control: same schedule, zero hits.
+    """
+    ps = cfg.page_size
+    head = [9] * (6 * ps)  # 48-token shared system prompt at page_size 8
+    n_reqs = 4 if fast else 8
+    eng = Engine(cfg, params=params, max_slots=4, max_seq_len=128,
+                 prefill_chunk=8, prefix_cache=enabled)
+    reqs = [Request(prompt=head + [20 + i] * (ps + i), max_new_tokens=6)
+            for i in range(n_reqs)]
+    # staggered arrivals (one request every other step): attach happens
+    # at admission, so later arrivals hit the pages earlier requests
+    # have already indexed — including mid-prefill (progressive insert)
+    pending = list(enumerate(reqs))
+    arrive: dict = {}
+    ttft: dict = {}
+    steps = 0
+    while (pending or not all(r.done for r in reqs)) and steps < 4000:
+        while pending and pending[0][0] * 2 <= steps:
+            _, r = pending.pop(0)
+            arrive[r.rid] = steps
+            eng.add_request(r)
+        eng.step()
+        steps += 1
+        for r in reqs:
+            if r.rid not in ttft and r.output:
+                ttft[r.rid] = steps - arrive[r.rid]
+    rep = eng.robustness_report()
+    if enabled:
+        # the PR's acceptance claim, enforced on every bench-fast run
+        assert rep["prefix_hits"] > 0, "shared-prompt wave never hit"
+        assert all(r.status is Status.FINISHED for r in reqs)
+    attempts = rep["prefix_hits"] + rep["prefix_misses"]
+    return {
+        "hits": rep["prefix_hits"],
+        "hit_rate": round(rep["prefix_hits"] / attempts, 3) if attempts else 0.0,
+        "hit_tokens": rep["prefix_hit_tokens"],
+        "pages_saved": rep["prefix_hit_tokens"] // ps,
+        "mean_ttft_steps": round(sum(ttft.values()) / len(ttft), 2),
+        "total_steps": steps,
+    }
 
-    def csv_lines(self):
-        return [line for t in self.tables for line in t.csv_lines()]
 
-
-def run(fast: bool = False):
+def run(fast: bool = False, prefix_cache: str = None):
     cfg = get_smoke("llama2-7b")
     probe = Engine(cfg, max_slots=1, max_seq_len=8)  # params donor
     t = Table("mixed_batch",
@@ -222,4 +263,18 @@ def run(fast: bool = False):
     # --- fault-tolerance scenario (ISSUE 6) -------------------------------
     rt = robustness_scenario(probe.params, cfg, fast=fast)
     rt.show()
-    return _Tables(t, rt)
+
+    # --- shared-system-prompt wave, prefix cache on vs off ---------------
+    # `--prefix-cache {on,off}` restricts to one row; default runs both
+    pt = Table("mixed_batch_prefix_cache",
+               ["cache", "hits", "hit_rate", "hit_tokens", "pages_saved",
+                "mean_ttft_steps", "total_steps"])
+    modes = ((True, "on"), (False, "off"))
+    if prefix_cache in ("on", "off"):
+        modes = tuple(m for m in modes if m[1] == prefix_cache)
+    for enabled, label in modes:
+        m = prefix_cache_workload(probe.params, cfg, enabled, fast=fast)
+        pt.add(label, m["hits"], m["hit_rate"], m["hit_tokens"],
+               m["pages_saved"], m["mean_ttft_steps"], m["total_steps"])
+    pt.show()
+    return Tables(t, rt, pt)

@@ -27,6 +27,10 @@ def main() -> None:
     ap.add_argument("--backend", default=None, choices=["tpu", "gpu"],
                     help="restrict kernel benches to one Pallas lowering "
                          "(default: sweep both where the bench supports it)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache", default=None,
+                    choices=["on", "off"],
+                    help="restrict prefix-cache-aware benches to one mode "
+                         "(default: benches report both on and off rows)")
     args = ap.parse_args()
 
     from benchmarks import (fig3_latency, fig4_decode, fig12_memory,
@@ -53,6 +57,8 @@ def main() -> None:
             kw = {}
             if "backend" in inspect.signature(fn).parameters:
                 kw["backend"] = args.backend
+            if "prefix_cache" in inspect.signature(fn).parameters:
+                kw["prefix_cache"] = args.prefix_cache
             table = fn(fast=args.fast, **kw)
             csv.extend(table.csv_lines())
         except Exception:  # noqa: BLE001

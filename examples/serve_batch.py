@@ -49,6 +49,12 @@ def main():
                          "chunk-by-chunk interleaved with decode, so a "
                          "long prompt never stalls the running batch; "
                          "default: whole prompt in one monolithic pass)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the global radix prefix cache, and give "
+                         "the wave a shared 48-token system-prompt head: "
+                         "requests admitted after the first slot wave "
+                         "attach to the cached head pages and prefill "
+                         "only their own tail")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
@@ -65,8 +71,13 @@ def main():
                  num_splits=args.num_splits,
                  combine_mode=args.combine_mode,
                  backend=args.backend,
-                 prefill_chunk=args.prefill_chunk)
-    reqs = wave(rng, args.requests, max_seq - args.max_new, args.max_new)
+                 prefill_chunk=args.prefill_chunk,
+                 prefix_cache=args.prefix_cache)
+    head = [7] * 48 if args.prefix_cache else []
+    reqs = wave(rng, args.requests,
+                max_seq - args.max_new - len(head), args.max_new)
+    for r in reqs:
+        r.prompt = head + r.prompt
     t0 = time.perf_counter()
     eng.generate(reqs, max_steps=3000)
     wall = time.perf_counter() - t0
@@ -78,6 +89,13 @@ def main():
           f"preemptions {eng.scheduler.preempted}; "
           f"prefill stalls {eng.scheduler.prefill_stalls}")
     print(eng.memory_report())
+    if args.prefix_cache:
+        rep = eng.robustness_report()
+        print(f"prefix cache: {rep['prefix_hits']} hits / "
+              f"{rep['prefix_misses']} misses, "
+              f"{rep['prefix_hit_tokens']} prompt tokens skipped "
+              f"({rep['prefix_hit_tokens'] // cfg.page_size} pages), "
+              f"{rep['prefix_evicted_pages']} pages evicted")
 
     # contiguous baseline under the same KV byte budget -> fewer slots
     slots_c = max(1, pool // max_seq)

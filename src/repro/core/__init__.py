@@ -1,14 +1,17 @@
-from repro.core import attention, cache, flex, paging
+from repro.core import attention, cache, flex, paging, prefix_cache
 from repro.core.cache import ContiguousKVCache, PagedKVCache
 from repro.core.paging import HostPageManager, PageState
+from repro.core.prefix_cache import PrefixCache
 
 __all__ = [
     "attention",
     "cache",
     "flex",
     "paging",
+    "prefix_cache",
     "ContiguousKVCache",
     "PagedKVCache",
     "HostPageManager",
     "PageState",
+    "PrefixCache",
 ]

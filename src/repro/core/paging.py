@@ -211,12 +211,25 @@ class HostPageManager:
         self.refcount = [0] * num_pages
         self.tables: dict[int, list[int]] = {}
         self.lens: dict[int, int] = {}
+        # optional global prefix cache (core.prefix_cache.PrefixCache wires
+        # itself in here).  Cache residency holds one refcount share per
+        # cached page, so `free` *retains* shared-prefix pages (refcount
+        # drops to >= 1, page stays off the free list) instead of recycling
+        # them, and the invariant generalizes to
+        #   refcount[p] == table occurrences of p + (1 if cache-resident)
+        self.cache = None
 
     # -- Alg.1 RESERVE ----------------------------------------------------
     def reserve(self, seq_id: int, new_len: int) -> bool:
         row = self.tables.setdefault(seq_id, [])
         cur = len(row)
         tgt = -(-new_len // self.page_size)
+        short = (tgt - cur) - len(self.free_list)
+        if short > 0 and self.cache is not None:
+            # pool pressure: evict LRU *detached* cached pages back onto
+            # the free list before refusing — cached-but-unreferenced
+            # pages are reclaimable capacity, not allocation
+            self.cache.reclaim(short)
         if tgt - cur > len(self.free_list):
             return False  # admission control: caller must wait / preempt
         for _ in range(tgt - cur):
@@ -262,7 +275,16 @@ class HostPageManager:
         caller must not admit the child.  (Silently keeping the bumps
         while the child has no tail row would let the child decode into a
         never-reserved page and desync refcounts from table occupancy.)
+
+        Forking an unknown/freed ``src`` raises ``SchedulerInvariantError``
+        with rid context (like ``free``) — the former bare ``KeyError``
+        gave the caller no structured signal that it raced a
+        free/preemption of the parent.
         """
+        if src not in self.tables or src not in self.lens:
+            raise SchedulerInvariantError(
+                f"fork from unknown rid {src}: no table row — freed, "
+                "preempted, or never reserved", rid=src)
         src_len = self.lens[src]
         full = src_len // self.page_size
         row = self.tables[src][:full]
@@ -284,6 +306,17 @@ class HostPageManager:
     @property
     def used_pages(self) -> int:
         return self.num_pages - len(self.free_list)
+
+    @property
+    def available_pages(self) -> int:
+        """Pages servable on demand: the free list plus cached pages the
+        prefix cache can evict (detached chains).  Capacity checks that
+        look only at ``free_list`` under-admit when the cache is warm —
+        a full-but-detached cache is reclaimable capacity."""
+        n = len(self.free_list)
+        if self.cache is not None:
+            n += self.cache.reclaimable()
+        return n
 
     def bytes_reserved(self, kv_heads: int, head_dim: int, n_layers: int,
                        itemsize: int = 2) -> int:

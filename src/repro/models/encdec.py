@@ -16,6 +16,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import attention as attn
@@ -195,20 +196,27 @@ class EncDecModel:
         `TransformerModel.prefill_chunk`): the chunk's self-attention
         resumes from the cached prefix pages at ``q_start``.  The audio
         encoder and per-layer cross-attention K/V depend only on the
-        frames; when NO row of the sub-batch is at chunk 0 they are
-        skipped entirely and the cached ``state["cross_k"/"cross_v"]``
-        reused.  The gate is batch-wide (a first-chunk row re-encodes the
-        whole sub-batch — idempotent, resume rows get identical values),
-        so under continuous admissions the encoder still runs about once
-        per admission rather than once per chunk; per-row gating without
-        dynamic shapes is an open refinement.  Host-driven (eager)
-        dispatch."""
+        frames, and the gate is **per row**: only rows at chunk 0
+        (``q_start == 0``) run the encoder — their frames are gathered
+        into a smaller encode batch and their fresh cross-K/V scattered
+        into the cached ``state["cross_k"/"cross_v"]`` stack; resume rows
+        never pay the encoder again.  (The former batch-wide gate
+        re-encoded the whole sub-batch whenever *any* row was at chunk 0
+        — idempotent for resume rows, but O(B) encoder work per
+        admission.)  Host-driven (eager) dispatch, hence the concrete
+        numpy indices."""
         cfg = self.cfg
         B, C = tokens.shape
-        reuse_cross = ("cross_k" in state
-                       and bool(jnp.all(q_start > 0)))
-        enc = (None if reuse_cross
-               else self.encode(params, extra["frames"], impl))
+        firsts = np.flatnonzero(np.asarray(q_start) == 0)
+        if "cross_k" not in state or firsts.size == B:
+            cross_mode, first_rows = "full", None
+            enc = self.encode(params, extra["frames"], impl)
+        elif firsts.size == 0:
+            cross_mode, first_rows, enc = "reuse", None, None
+        else:
+            cross_mode = "partial"
+            first_rows = jnp.asarray(firsts)
+            enc = self.encode(params, extra["frames"][first_rows], impl)
         pos = (q_start[:, None].astype(jnp.int32)
                + jnp.arange(C, dtype=jnp.int32)[None])
         x = layers.embed_tokens(params["embed"], tokens)
@@ -229,8 +237,14 @@ class EncDecModel:
             new_v.append(vp)
             x = x + o
             h = layers.apply_norm(p["lnx"], x)
-            if reuse_cross:
+            if cross_mode == "reuse":
                 ck, cv = state["cross_k"][li], state["cross_v"][li]
+            elif cross_mode == "partial":
+                # fresh cross-K/V for first-chunk rows only, scattered
+                # into the cached stack; resume rows are untouched
+                ck_new, cv_new = attn.cross_kv(p["cross_attn"], enc)
+                ck = state["cross_k"][li].at[first_rows].set(ck_new)
+                cv = state["cross_v"][li].at[first_rows].set(cv_new)
             else:
                 ck, cv = attn.cross_kv(p["cross_attn"], enc)
             new_ck.append(ck)

@@ -29,6 +29,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.distributed.sharding import logical_shard
@@ -367,16 +368,32 @@ class TransformerModel:
                 "chunked prefill does not support recurrent layers "
                 f"(pattern {cfg.layer_pattern!r})")
         B, C = tokens.shape
-        # cross-attention K/V depend only on the image context: when no
-        # row is at chunk 0, skip the projection and reuse the cached
-        # state["cross_k"/"cross_v"].  Batch-wide gate — a first-chunk
-        # row recomputes every row (idempotent for resume rows), so the
-        # cost recurs per admission, not per chunk.  Host-driven (the
-        # engine calls this eagerly), hence the concrete bool().
-        reuse_cross = ("cross_k" in state
-                       and bool(jnp.all(q_start > 0)))
-        if not reuse_cross:
-            extra = self._project_extra(params, extra)
+        # cross-attention K/V depend only on the image context, and only
+        # rows at chunk 0 need them computed — resume rows reuse their
+        # cached state["cross_k"/"cross_v"] rows untouched.  The gate is
+        # *per row*: project just the first-chunk rows' context and
+        # scatter their fresh K/V into the cached stack.  (The former
+        # batch-wide gate re-projected every row whenever any row was at
+        # chunk 0 — idempotent for resume rows, but O(B) vision-encoder
+        # work per admission instead of O(first-chunk rows).)
+        # Host-driven (the engine calls this eagerly), hence the
+        # concrete numpy indices.
+        cross_mode, first_rows, proj = "reuse", None, None
+        if self.n_cross_layers:
+            firsts = np.flatnonzero(np.asarray(q_start) == 0)
+            if "cross_k" not in state or firsts.size == B:
+                cross_mode = "full"
+            elif firsts.size == 0:
+                cross_mode = "reuse"
+            else:
+                cross_mode = "partial"
+                first_rows = jnp.asarray(firsts)
+            if cross_mode != "reuse":
+                sub = extra
+                if cross_mode == "partial":
+                    sub = dict(extra,
+                               image_embeds=extra["image_embeds"][first_rows])
+                proj = self._project_extra(params, sub)
         x = layers.embed_tokens(params["embed"], tokens)
 
         st = dict(state)
@@ -399,10 +416,17 @@ class TransformerModel:
                 ai += 1
                 x = x + o
             elif code == "C":
-                if reuse_cross:
+                if cross_mode == "reuse":
                     ck, cv = st["cross_k"][ci], st["cross_v"][ci]
+                elif cross_mode == "partial":
+                    # fresh K/V for first-chunk rows only, scattered into
+                    # the cached stack; resume rows' rows are untouched
+                    ck_new, cv_new = attn.cross_kv(p["attn"],
+                                                   proj["image_embeds"])
+                    ck = st["cross_k"][ci].at[first_rows].set(ck_new)
+                    cv = st["cross_v"][ci].at[first_rows].set(cv_new)
                 else:
-                    ck, cv = attn.cross_kv(p["attn"], extra["image_embeds"])
+                    ck, cv = attn.cross_kv(p["attn"], proj["image_embeds"])
                 new_ck.append(ck)
                 new_cv.append(cv)
                 ci += 1

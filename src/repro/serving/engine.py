@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.paging import HostPageManager
+from repro.core.prefix_cache import PrefixCache
 from repro.errors import (EngineError, InternalError, InvalidRequest,
                           NumericsError, PoolExhausted, RequestTooLong,
                           SchedulerInvariantError, TransientDeviceError)
@@ -57,10 +58,19 @@ class Engine:
         # the TPU lowering in interpret mode)
         prefill_chunk: Optional[int] = None,  # tokens of prompt prefilled
         # per engine step (None = whole prompt in one monolithic pass).
-        # Chunked prefill bounds per-step work: prompts cache
-        # `prefill_chunk` tokens per iteration, interleaved with decode
-        # steps for the running batch (vLLM-style continuous batching),
-        # resuming from the already-cached prefix pages each step.
+        # Chunked prefill bounds per-step work: the whole prefill
+        # sub-batch caches at most `prefill_chunk` tokens per iteration
+        # (a *global* budget split across concurrent prefills),
+        # interleaved with decode steps for the running batch
+        # (vLLM-style continuous batching), resuming from the
+        # already-cached prefix pages each step.
+        prefix_cache: bool = False,  # global prefix cache: radix-indexed
+        # page sharing across requests (core.prefix_cache).  Admission
+        # attaches new prompts to the longest previously-cached prefix
+        # (zero prefill work for the hit), releases retain written pages,
+        # and the pool evicts detached chains LRU-first under pressure.
+        # Requires the paged engine with pure dense self-attention (no
+        # windowed/recurrent/cross layers — see the gates below).
         # --- fault tolerance (ISSUE 6) --------------------------------
         faults: Optional[FaultPlan] = None,  # deterministic fault
         # injection: wraps the page manager's reserve/extend/free, the
@@ -127,16 +137,44 @@ class Engine:
             num_pages = max(-(-pool_tokens // ps), self.pages_per_seq)
         self.num_pages = num_pages
 
+        if prefix_cache:
+            # pages must be immutable once written for cross-request
+            # sharing to be sound, and their content must be a function
+            # of the token prefix alone (that is the radix key)
+            if not self.paged:
+                raise ValueError("prefix_cache requires the paged engine "
+                                 "(paged=True)")
+            if window > 0:
+                raise ValueError(
+                    "prefix_cache requires window=0: windowed layers "
+                    "overwrite their ring pages in place, so cached "
+                    "pages shared from a live donor would be mutated")
+            if (cfg.family == "encdec"
+                    or getattr(self.model, "n_cross_layers", 0)):
+                raise ValueError(
+                    "prefix_cache does not support encoder/cross-"
+                    "attention models: self-attention K/V depend on the "
+                    "per-request image/audio context, so token-keyed "
+                    "page sharing would be wrong")
+            if any(c in "RMS" for c in cfg.pattern()):
+                raise ValueError(
+                    "prefix_cache does not support recurrent layers "
+                    f"(pattern {cfg.layer_pattern!r}): their state is "
+                    "not page-addressed")
+
         self.faults = faults
         self.numerics_guard = numerics_guard
         self.max_step_retries = max_step_retries
         self.retry_backoff_s = retry_backoff_s
         self.mgr = (FaultyPageManager(num_pages, ps, faults)
                     if faults is not None else HostPageManager(num_pages, ps))
+        self.prefix_cache = (PrefixCache(self.mgr, faults=faults)
+                             if prefix_cache else None)
         self.scheduler = Scheduler(self.mgr, max_slots, max_seq_len,
                                    prefill_chunk=prefill_chunk,
                                    max_waiting=max_waiting,
-                                   admit_watermark=admit_watermark)
+                                   admit_watermark=admit_watermark,
+                                   prefix_cache=self.prefix_cache)
         self.state = self._init_state()
         self._slot_extra: Dict[int, Dict] = {}
         self.steps = 0
@@ -348,6 +386,7 @@ class Engine:
     def robustness_report(self) -> Dict[str, int]:
         """Counters for the failure surface (mirrors memory_report)."""
         s = self.scheduler
+        pc = self.prefix_cache
         return {
             "failed": s.failed,
             "cancelled": s.cancelled,
@@ -357,6 +396,11 @@ class Engine:
             "prefill_stalls": s.prefill_stalls,
             "transient_retries": self.stats["transient_retries"],
             "fault_fires": self.faults.fires if self.faults else 0,
+            # prefix-cache hit surface (all 0 when the cache is off)
+            "prefix_hits": pc.hits if pc else 0,
+            "prefix_misses": pc.misses if pc else 0,
+            "prefix_hit_tokens": pc.hit_tokens if pc else 0,
+            "prefix_evicted_pages": pc.evicted_pages if pc else 0,
         }
 
     # ------------------------------------------------------------------
@@ -396,6 +440,12 @@ class Engine:
         cfg = self.cfg
         slots = [s for s, _ in admitted]
         reqs = [r for _, r in admitted]
+        if any(r.prefill_pos > 0 for r in reqs):
+            # at least one row attached to cached prefix pages: run the
+            # wave through the prefix-aware chunk kernel, each row's
+            # suffix only (cold rows are just q_start=0)
+            self._prefill_from(slots, reqs)
+            return
         toks = [r.prompt + r.output for r in reqs]  # preempted: re-prefill all
         L = max(len(t) for t in toks)
         B = len(reqs)
@@ -438,35 +488,107 @@ class Engine:
             st["rec"] = jax.tree_util.tree_map(
                 lambda g, s: g.at[:, idx].set(s), st["rec"], new_st["rec"])
 
+        for i, r in enumerate(reqs):
+            r.prefill_pos = int(lens[i])  # everything written
+        self._cache_insert_live(reqs)
         self._sample_and_append(reqs, logits, first=True)
+
+    def _prefill_from(self, slots: List[int], reqs: List[Request]) -> None:
+        """Monolithic prefill resuming past cached prefixes: each row runs
+        only its un-cached suffix (``q_start = matched tokens``) through
+        the prefix-aware chunk kernel, attending back over the shared
+        pages through its block table.  Output must match a cold
+        ``model.prefill`` of the whole prompt ≤ 1e-5 — that equivalence
+        is exactly what the chunked-prefill gate already proves for the
+        kernel, and ``tests/test_prefix_cache.py`` re-proves end-to-end.
+
+        Only reachable with the prefix cache on, which gates the model to
+        pure dense self-attention — no cross/rec state to merge here.
+        """
+        toks = [r.prompt + r.output for r in reqs]
+        starts = np.asarray([r.prefill_pos for r in reqs], np.int32)
+        lens = np.asarray([len(t) for t in toks], np.int32)
+        q_lens = lens - starts  # >= 1: attach caps the match at total-1
+        B, C = len(reqs), int(q_lens.max())
+        batch = np.zeros((B, C), np.int32)
+        for i, t in enumerate(toks):
+            batch[i, :q_lens[i]] = t[starts[i]:lens[i]]
+
+        full_tables = self._tables_array()
+        sub_tables = np.asarray(full_tables)[np.asarray(slots)]
+        st = self.state
+        sub_state: Dict[str, Any] = {
+            "pos": jnp.asarray(starts),
+            "k_pages": st["k_pages"],
+            "v_pages": st["v_pages"],
+            "tables": jnp.asarray(sub_tables),
+        }
+        logits, new_st = self.model.prefill_chunk(
+            self.params, jnp.asarray(batch), sub_state,
+            q_start=jnp.asarray(starts), q_lens=jnp.asarray(q_lens),
+            impl=self.impl, interpret=self.interpret,
+            pages_per_block=self.pages_per_block,
+            num_splits=self.num_splits, combine_mode=self.combine_mode,
+            backend=self.backend)
+
+        st["k_pages"] = new_st["k_pages"]
+        st["v_pages"] = new_st["v_pages"]
+        idx = jnp.asarray(slots)
+        st["pos"] = st["pos"].at[idx].set(jnp.asarray(lens))
+        for i, r in enumerate(reqs):
+            r.prefill_pos = int(lens[i])
+        self._cache_insert_live(reqs)
+        self._sample_and_append(reqs, logits, first=True)
+
+    def _cache_insert_live(self, reqs: List[Request]) -> None:
+        """Index each request's written full pages into the prefix cache
+        (progressive insert: concurrent requests sharing a prompt head
+        hit on each other's pages mid-wave, not just after release).
+        Callers update ``req.prefill_pos`` to the written token count
+        first — partial pages are skipped inside ``insert``."""
+        if self.prefix_cache is None:
+            return
+        for r in reqs:
+            row = self.mgr.tables.get(r.rid)
+            if row:
+                self.prefix_cache.insert(r.prompt + r.output, row,
+                                         r.prefill_pos)
 
     def _prefill_chunk_step(self) -> None:
         """Advance every PREFILLING request by one ``prefill_chunk``
         installment (chunked continuous batching).
 
-        Each selected request's next chunk is reserved chunk-wise
-        (`Scheduler.grow_prefill`); a request whose chunk cannot get pages
-        stalls this step and resumes from its cached pages (``mgr.lens``)
-        later — no recompute.  The sub-batch is padded to the longest live
-        chunk (≤ ``prefill_chunk``), so per-step prefill work is bounded
-        regardless of prompt length.  When a request's last chunk lands it
-        flips to RUNNING and its first token is sampled from the chunk's
-        last-position logits.
+        The ``prefill_chunk`` token budget is **global across the prefill
+        sub-batch**: k concurrent PREFILLING rows split one chunk (oldest
+        slot first), they do not each cache a full chunk — the former
+        per-request budget let a step's prefill work scale as
+        ``k * prefill_chunk``, defeating the bounded-per-step-work
+        contract the knob exists for.  Each selected installment is
+        reserved chunk-wise (`Scheduler.grow_prefill`); a request whose
+        installment cannot get pages stalls this step and resumes from
+        its cached pages (``mgr.lens``) later — no recompute.  When a
+        request's last chunk lands it flips to RUNNING and its first
+        token is sampled from the chunk's last-position logits.
         """
         chunk = self.prefill_chunk
+        budget = chunk  # global per-step token budget, split across rows
         sel: List[Tuple[int, Request, int, int]] = []
         for slot in sorted(self.scheduler.running):
+            if budget <= 0:
+                break
             # re-fetch per iteration: grow_prefill below may preempt a
             # PREFILLING victim in a slot this (snapshotted) loop has not
             # visited yet — indexing the snapshot would KeyError
             req = self.scheduler.running.get(slot)
             if req is None or req.status is not Status.PREFILLING:
                 continue
-            if not self.scheduler.grow_prefill(req):
+            want = min(budget, req.total_len - req.prefill_pos)
+            if not self.scheduler.grow_prefill(req, want):
                 continue  # stalled: keeps pages, resumes next step
             start = req.prefill_pos
-            q_len = min(chunk, req.total_len - start)
+            q_len = min(want, req.total_len - start)
             sel.append((slot, req, start, q_len))
+            budget -= q_len
         # grow_prefill may preempt victims already selected — drop them
         sel = [(s, r, st0, ql) for (s, r, st0, ql) in sel
                if self.scheduler.running.get(s) is r]
@@ -538,6 +660,7 @@ class Engine:
                 req.status = Status.RUNNING
                 done_rows.append(i)
                 done_reqs.append(req)
+        self._cache_insert_live([r for _, r, _, _ in sel])
         if done_reqs:
             self._sample_and_append(
                 done_reqs, jnp.asarray(logits)[np.asarray(done_rows)],
@@ -763,7 +886,9 @@ class Engine:
         cached_len = self.mgr.lens[src.rid]
         full_pages = cached_len // ps
         need_tail = 1 if cached_len % ps else 0
-        if need_tail + self.scheduler.headroom > len(self.mgr.free_list):
+        # available_pages counts detached cached chains (reclaimed on
+        # demand inside mgr.reserve), not just the raw free list
+        if need_tail + self.scheduler.headroom > self.mgr.available_pages:
             raise PoolExhausted("no pages for fork tail", rid=src.rid,
                                 resource="pages")
 
@@ -830,10 +955,17 @@ class Engine:
         live_tokens = sum(r.total_len
                           for r in self.scheduler.running.values())
         minimum = live_tokens * 2 * n_attn * Hkv * hd * item
+        pc = self.prefix_cache
         return {
             "pool_bytes": float(cache_bytes),
             "reserved_bytes": float(reserved),
             "theoretical_min_bytes": float(minimum),
             "overhead_frac": (reserved / minimum - 1.0) if minimum else 0.0,
             "used_pages": float(self.mgr.used_pages) if self.paged else -1.0,
+            # prefix-cache residency: `cached_pages` are indexed in the
+            # radix trie; the `reclaimable` subset is evictable on demand
+            # (detached chains), i.e. capacity rather than load
+            "cached_pages": float(pc.resident_pages) if pc else 0.0,
+            "reclaimable_pages": float(pc.reclaimable()) if pc else 0.0,
+            "prefix_hit_tokens": float(pc.hit_tokens) if pc else 0.0,
         }

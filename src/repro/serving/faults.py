@@ -28,6 +28,8 @@ Injection sites and the fault kinds they accept:
   prefill   transient    prefill dispatch raises TransientDeviceError
   decode    transient    decode dispatch raises TransientDeviceError
   sample    nan          that request's logits row is set to NaN
+  attach    evict        prefix-cache chain evicted between lookup and
+                         attach (admission degrades to a cold prefill)
   ========  ===========  ==================================================
 
 All faults fire *before* the wrapped operation mutates anything, so a
@@ -45,8 +47,9 @@ from typing import List, Optional, Tuple
 from repro.core.paging import HostPageManager
 from repro.errors import SchedulerInvariantError
 
-SITES = ("reserve", "extend", "free", "prefill", "decode", "sample")
-KINDS = ("alloc_fail", "transient", "nan", "error")
+SITES = ("reserve", "extend", "free", "prefill", "decode", "sample",
+         "attach")
+KINDS = ("alloc_fail", "transient", "nan", "error", "evict")
 _VALID = {
     "reserve": ("alloc_fail",),
     "extend": ("alloc_fail",),
@@ -54,6 +57,10 @@ _VALID = {
     "prefill": ("transient",),
     "decode": ("transient",),
     "sample": ("nan",),
+    # prefix-cache attach (core.prefix_cache): the matched chain is
+    # evicted between lookup and attach — admission must degrade to a
+    # plain cold prefill with nothing leaked
+    "attach": ("evict",),
 }
 
 

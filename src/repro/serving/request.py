@@ -57,6 +57,10 @@ class Request:
     status: Status = Status.WAITING
     slot: int = -1                     # batch slot while RUNNING/PREFILLING
     prefill_pos: int = 0               # tokens cached so far (chunked prefill)
+    cached_prefix: int = 0             # tokens served from the global prefix
+    #                                    cache at the latest admission (0 =
+    #                                    cold prefill); set by the scheduler
+    #                                    even on re-admission after preempt
     output: List[int] = field(default_factory=list)
     parent: Optional[int] = None       # prefix-shared parent request id
     metrics: Dict[str, float] = field(default_factory=dict)

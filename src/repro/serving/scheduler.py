@@ -48,12 +48,18 @@ class Scheduler:
                  max_seq_len: int, headroom_pages: int = 1,
                  prefill_chunk: Optional[int] = None,
                  max_waiting: Optional[int] = None,
-                 admit_watermark: Optional[float] = None):
+                 admit_watermark: Optional[float] = None,
+                 prefix_cache=None):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1 (or None)")
         if admit_watermark is not None and not 0.0 < admit_watermark <= 1.0:
             raise ValueError("admit_watermark must lie in (0, 1] (or None)")
         self.mgr = manager
+        # global prefix cache (core.prefix_cache.PrefixCache or None):
+        # admission attaches new requests to the longest cached prefix,
+        # and every release (finish/cancel/preempt) retains the written
+        # full pages for future hits
+        self.cache = prefix_cache
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.headroom = headroom_pages
@@ -112,8 +118,13 @@ class Scheduler:
         self.waiting.append(req)
 
     def _pool_util(self) -> float:
-        return (self.mgr.used_pages / self.mgr.num_pages
-                if self.mgr.num_pages else 0.0)
+        # detached cached pages are reclaimable on demand, so they count
+        # as capacity, not load — otherwise a warm cache pins the
+        # admission watermark at "full" and sheds everything
+        if not self.mgr.num_pages:
+            return 0.0
+        used = self.mgr.num_pages - self.mgr.available_pages
+        return used / self.mgr.num_pages
 
     def free_slots(self) -> List[int]:
         return [s for s in range(self.max_slots) if s not in self.running]
@@ -137,20 +148,38 @@ class Scheduler:
             # the tokens this request's prefill must cache (preempted
             # requests re-prefill prompt + generated-so-far)
             target = req.total_len
-            first = (target if self.prefill_chunk is None
-                     else min(self.prefill_chunk, target))
-            need = self._pages_for(first) + self.headroom
-            if need > len(self.mgr.free_list):
+            matched = 0
+            if self.cache is not None:
+                # longest-cached-prefix attach: alias the shared pages
+                # into this rid's row (refcount++) and prefill only the
+                # suffix.  Capped at target-1 so at least one position is
+                # always prefilled — sampling needs its logits.
+                matched = self.cache.attach(
+                    req.rid, req.prompt + req.output,
+                    max_tokens=target - 1)
+            remaining = target - matched
+            first = (remaining if self.prefill_chunk is None
+                     else min(self.prefill_chunk, remaining))
+            need = (self._pages_for(matched + first)
+                    - self._pages_for(matched) + self.headroom)
+            ok = need <= self.mgr.available_pages
+            if ok:
+                # may be refused anyway (injected allocation fault);
+                # reserve is all-or-nothing, so only the attach (if any)
+                # needs rolling back
+                ok = self.mgr.reserve(req.rid, matched + first)
+            if not ok:
+                if matched:
+                    # roll the attach back: the shared pages keep their
+                    # cache-residency reference (stay resident, off the
+                    # free list) — the admission degrades to a retry
+                    # next step with nothing leaked
+                    self.mgr.free(req.rid)
                 break  # head-of-line blocking keeps FIFO fairness
-            if not self.mgr.reserve(req.rid, first):
-                # the capacity check passed but the reservation was refused
-                # (injected allocation fault): leave the request at the
-                # queue head and retry next step — reserve is
-                # all-or-nothing, so nothing needs rolling back
-                break
             self.waiting.pop(0)
             slot = slots.pop(0)
-            req.prefill_pos = 0
+            req.prefill_pos = matched
+            req.cached_prefix = matched
             req.status = (Status.RUNNING if self.prefill_chunk is None
                           else Status.PREFILLING)
             req.slot = slot
@@ -159,19 +188,26 @@ class Scheduler:
         return admitted
 
     # ------------------------------------------------------------------
-    def grow_prefill(self, req: Request) -> bool:
-        """Reserve pages for ``req``'s next prefill chunk (chunked mode).
+    def grow_prefill(self, req: Request,
+                     n_tokens: Optional[int] = None) -> bool:
+        """Reserve pages for ``req``'s next prefill installment (chunked
+        mode).
 
-        Returns True when the reservation covers
-        ``min(prefill_pos + prefill_chunk, total_len)`` tokens — the
-        engine may then run the chunk.  On a dry pool the request
+        ``n_tokens`` is the installment size (defaults to the full
+        ``prefill_chunk``); the engine passes each request's slice of the
+        *global* per-step token budget, so k concurrent prefills split
+        one chunk rather than each reserving a whole one.  Returns True
+        when the reservation covers
+        ``min(prefill_pos + n_tokens, total_len)`` tokens — the engine
+        may then run the installment.  On a dry pool the request
         *stalls* (returns False) and resumes from its cached pages on a
         later step — unless no other request is decoding (nothing would
         ever free pages), in which case the youngest other live request
         is preempted so the batch always makes progress.
         """
         assert self.prefill_chunk is not None, "monolithic mode"
-        want = min(req.prefill_pos + self.prefill_chunk, req.total_len)
+        step = self.prefill_chunk if n_tokens is None else n_tokens
+        want = min(req.prefill_pos + step, req.total_len)
         if self.mgr.lens.get(req.rid, 0) >= want:
             return True
         while not self.mgr.reserve(req.rid, want):
@@ -235,7 +271,31 @@ class Scheduler:
                 victims.append(victim)
         return victims
 
+    def _retain_in_cache(self, req: Request) -> None:
+        """Index ``req``'s written full pages into the prefix cache before
+        its row is freed (retain-on-free): the pages gain a residency
+        reference, so the ``mgr.free`` that follows leaves them resident
+        instead of recycling them.
+
+        ``written`` must not overrun what the model actually wrote:
+        PREFILLING rows' ``mgr.lens`` runs ahead of the prefilled prefix
+        (chunks are reserved before they run), and a RUNNING row's last
+        sampled token is *not* in the pools yet (it is the next decode
+        input — the same off-by-one ``fork_request`` sizes its tail by).
+        """
+        if self.cache is None or req.rid not in self.mgr.tables:
+            return
+        if req.status is Status.PREFILLING:
+            written = req.prefill_pos
+        else:
+            written = min(self.mgr.lens.get(req.rid, 0), req.total_len - 1)
+        self.cache.insert(req.prompt + req.output,
+                          self.mgr.tables[req.rid], written)
+
     def _preempt(self, req: Request) -> None:
+        # retain-then-free: the preempted prefix stays cached, so the
+        # re-admission re-attaches to it and re-prefills almost nothing
+        self._retain_in_cache(req)
         self.mgr.free(req.rid)
         del self.running[req.slot]
         req.slot = -1
@@ -251,15 +311,22 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     # fault isolation: per-request teardown (FAILED / CANCELLED)
-    def _remove(self, req: Request) -> None:
+    def _remove(self, req: Request, retain: bool = True) -> None:
         """Release everything ``req`` holds: queue position, batch slot,
         pages + block-table row.  Safe in every state (WAITING holds no
-        pages; PREEMPTED holds neither pages nor slot)."""
+        pages; PREEMPTED holds neither pages nor slot).
+
+        ``retain=True`` indexes the written full pages into the prefix
+        cache first (finish/cancel/preempt paths — multi-turn reuse);
+        failure teardown passes ``retain=False`` so a request whose row
+        may hold poisoned K/V (NaN guard) never seeds the cache."""
         if req in self.waiting:
             self.waiting.remove(req)
         if self.running.get(req.slot) is req:
             del self.running[req.slot]
         if req.rid in self.mgr.tables:
+            if retain:
+                self._retain_in_cache(req)
             self.mgr.free(req.rid)
         req.slot = -1
 
@@ -267,7 +334,7 @@ class Scheduler:
         """Terminal per-request failure: resources released, structured
         error attached, batch-mates untouched.  The engine drains
         ``failed_events`` each step to report terminal requests."""
-        self._remove(req)
+        self._remove(req, retain=False)
         req.error = err
         req.status = Status.FAILED
         self.failed += 1

@@ -745,3 +745,89 @@ def test_chaos_soak_scheduler_level():
     assert not sched.has_work
     assert len(mgr.free_list) == mgr.num_pages
     assert all(c == 0 for c in mgr.refcount)
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache fault sites (satellite of the prefix-cache PR)
+# ---------------------------------------------------------------------------
+def test_injected_attach_evict_degrades_to_cold_prefill(donor):
+    """An `evict` injected at the `attach` site models the cached chain
+    disappearing between lookup and attach: the admission must degrade to
+    a plain cold prefill (same output), never a partial attach."""
+    from test_prefix_cache import check_cache_invariants
+
+    cfg, params = donor
+    ps = cfg.page_size
+    mk = lambda: Request(prompt=[5] * 3 * ps, max_new_tokens=4)
+
+    # un-faulted cache-on reference: warm once, then the hit run
+    ref_eng = Engine(cfg, params=params, max_slots=2, max_seq_len=64,
+                     prefix_cache=True, rng=jax.random.PRNGKey(3))
+    ref_eng.generate([mk()], max_steps=200)
+    ref = ref_eng.generate([mk()], max_steps=200)[0]
+    assert ref.cached_prefix > 0, "reference run must actually hit"
+
+    plan = FaultPlan([FaultRule(site="attach", kind="evict", nth=1)])
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=64,
+                 prefix_cache=True, faults=plan, rng=jax.random.PRNGKey(3))
+    warm = eng.generate([mk()], max_steps=200)[0]  # cold: attach never
+    assert plan.fires == 0                         # matches, rule unpolled
+    hit = eng.generate([mk()], max_steps=200)[0]   # match -> injected evict
+    assert plan.fires == 1
+    assert eng.prefix_cache.attach_faults == 1
+    assert hit.status is Status.FINISHED
+    assert hit.cached_prefix == 0, "faulted attach must degrade to cold"
+    assert hit.output == warm.output == ref.output
+    check_cache_invariants(eng.mgr, eng.prefix_cache, eng.scheduler)
+
+    # the plan is spent: the next identical prompt hits again (the cold
+    # run re-seeded the evicted chain on release)
+    again = eng.generate([mk()], max_steps=200)[0]
+    assert again.cached_prefix > 0
+    assert again.output == ref.output
+    check_cache_invariants(eng.mgr, eng.prefix_cache, eng.scheduler)
+
+
+def test_reserve_refusal_after_attach_rolls_back_and_retries(donor):
+    """An injected reserve refusal *after* a successful attach exercises
+    the admission rollback: the attached pages must return to cache-only
+    residency (nothing leaked, nothing evicted) and the retry next step
+    must hit again and produce the reference output."""
+    from test_prefix_cache import check_cache_invariants
+
+    cfg, params = donor
+    ps = cfg.page_size
+    mk = lambda: Request(prompt=[6] * 3 * ps, max_new_tokens=4)
+
+    ref_eng = Engine(cfg, params=params, max_slots=2, max_seq_len=64,
+                     prefix_cache=True, rng=jax.random.PRNGKey(4))
+    ref_eng.generate([mk()], max_steps=200)
+    ref = ref_eng.generate([mk()], max_steps=200)[0]
+
+    b = mk()
+    plan = FaultPlan([FaultRule(site="reserve", kind="alloc_fail",
+                                rid=b.rid, nth=1)])
+    eng = Engine(cfg, params=params, max_slots=2, max_seq_len=64,
+                 prefix_cache=True, faults=plan, rng=jax.random.PRNGKey(4))
+    eng.generate([mk()], max_steps=200)
+    resident_before = eng.prefix_cache.resident_pages
+    assert resident_before >= 3
+
+    eng.add_request(b)
+    eng.step()  # admission: attach hits, injected reserve refusal
+    assert plan.fires == 1
+    assert b.status is Status.WAITING, "refused admission must re-queue"
+    assert b.rid not in eng.mgr.tables, "rollback must free the attach"
+    assert eng.prefix_cache.resident_pages == resident_before, (
+        "rolled-back pages must stay cache-resident")
+    check_cache_invariants(eng.mgr, eng.prefix_cache, eng.scheduler)
+
+    for _ in range(200):
+        if b.done:
+            break
+        eng.step()
+    assert b.status is Status.FINISHED
+    assert b.cached_prefix > 0, "retry must re-attach to the same chain"
+    assert eng.prefix_cache.hits == 2  # rolled-back attach + the retry
+    assert b.output == ref.output
+    check_cache_invariants(eng.mgr, eng.prefix_cache, eng.scheduler)

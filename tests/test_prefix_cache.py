@@ -1,0 +1,653 @@
+"""Global prefix cache (radix-indexed page sharing): the acceptance gate.
+
+The contract this suite pins down (tentpole of the prefix-cache PR):
+
+  * released requests index their *full* KV pages into a radix trie keyed
+    by page-granular token chunks; admission attaches new requests to the
+    longest cached prefix (refcount++ per shared page, ``mgr.lens`` /
+    ``prefill_pos`` advanced past the match) and prefills only the
+    suffix;
+  * residency is one refcount share, so ``mgr.free`` *retains* cached
+    pages, and the allocator invariant generalizes to
+    ``refcount[p] == table occurrences + (1 if cache-resident)`` — which
+    ``check_cache_invariants`` asserts exhaustively, together with
+    free-list conservation and trie consistency;
+  * eviction is LRU, leaf-first, refcount-aware: attached chains are
+    untouchable, and ``mgr.reserve`` reclaims detached pages on demand,
+    so a warm cache is capacity (``mgr.available_pages``), never
+    deadlock;
+  * hits are provably lossless: greedy cache-on output equals cache-off
+    output for monolithic and chunked prefill, through mid-prefill
+    stalls, preemption of attached requests, and eviction racing
+    admission.
+
+Run via ``make test-prefix`` (CI leg ``prefix``).
+"""
+
+import random
+
+import jax
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.paging import HostPageManager
+from repro.core.prefix_cache import PrefixCache
+from repro.errors import SchedulerInvariantError
+from repro.serving import Engine, Request
+from repro.serving.request import Status
+from repro.serving.scheduler import Scheduler
+
+PS = 4  # page size for the model-free unit tests
+
+
+# ---------------------------------------------------------------------------
+# the cache-aware allocator invariant (supersedes the exact-refcount check
+# in test_scheduler_preempt for managers with a cache wired in)
+# ---------------------------------------------------------------------------
+def check_cache_invariants(mgr: HostPageManager, cache: PrefixCache,
+                           sched: Scheduler = None):
+    # 1. trie consistency: every resident page is reachable from the root
+    #    exactly once, with coherent parent/child/chunk links.
+    reachable = set()
+
+    def walk(node):
+        for chunk, child in node.children.items():
+            assert child.parent is node and child.chunk == chunk
+            assert len(chunk) == mgr.page_size, "non-page-granular chunk"
+            assert cache._page_node.get(child.page) is child
+            assert child.page not in reachable, "page cached twice"
+            reachable.add(child.page)
+            walk(child)
+
+    walk(cache.root)
+    assert reachable == set(cache._page_node)
+
+    # 2. refcount == table occurrences + residency share, for every page.
+    occ = {}
+    for row in mgr.tables.values():
+        for p in row:
+            occ[p] = occ.get(p, 0) + 1
+    for p in range(mgr.num_pages):
+        want = occ.get(p, 0) + (1 if p in reachable else 0)
+        assert mgr.refcount[p] == want, (
+            f"page {p}: refcount {mgr.refcount[p]} != {occ.get(p, 0)} "
+            f"occurrences + {int(p in reachable)} residency")
+
+    # 3. free-list conservation: free xor held, no duplicates, whole pool.
+    free = set(mgr.free_list)
+    assert len(free) == len(mgr.free_list), "duplicate pages on free list"
+    held = set(occ) | reachable
+    assert not (free & held), "page simultaneously free and held"
+    assert len(held) + len(mgr.free_list) == mgr.num_pages
+
+    # 4. table rows only under live rids (when a scheduler is in play).
+    if sched is not None:
+        live = {r.rid for r in sched.running.values()}
+        assert set(mgr.tables) == live
+        assert set(mgr.lens) == live
+
+
+def _mgr_cache(pages=16):
+    mgr = HostPageManager(num_pages=pages, page_size=PS)
+    return mgr, PrefixCache(mgr)
+
+
+# ---------------------------------------------------------------------------
+# trie unit tests: insert / match / attach / dedupe
+# ---------------------------------------------------------------------------
+def test_insert_caches_only_full_pages_and_free_retains():
+    mgr, cache = _mgr_cache()
+    toks = list(range(10))  # 2 full pages + 2-token partial tail
+    assert mgr.reserve(0, 10)
+    row = list(mgr.tables[0])
+    assert cache.insert(toks, row, written=10) == 2
+    assert cache.resident_pages == 2
+    assert row[2] not in cache._page_node, "partial tail must not cache"
+    check_cache_invariants(mgr, cache)
+    mgr.free(0)
+    # retain-on-free: the cached pages hold their residency reference
+    assert mgr.refcount[row[0]] == 1 and mgr.refcount[row[1]] == 1
+    assert row[0] not in mgr.free_list and row[1] not in mgr.free_list
+    assert row[2] in mgr.free_list, "uncached tail recycles normally"
+    check_cache_invariants(mgr, cache)
+
+
+def test_insert_below_one_page_caches_nothing():
+    mgr, cache = _mgr_cache()
+    assert mgr.reserve(0, 3)
+    assert cache.insert([1, 2, 3], mgr.tables[0], written=3) == 0
+    assert cache.resident_pages == 0
+    mgr.free(0)
+    assert len(mgr.free_list) == mgr.num_pages
+
+
+def test_attach_aliases_longest_cached_prefix():
+    mgr, cache = _mgr_cache()
+    toks = list(range(12))
+    assert mgr.reserve(0, 12)
+    donor_row = list(mgr.tables[0])
+    cache.insert(toks, donor_row, written=12)
+    mgr.free(0)
+
+    # full-depth hit
+    matched = cache.attach(1, toks + [99, 98], max_tokens=13)
+    assert matched == 12
+    assert mgr.tables[1] == donor_row and mgr.lens[1] == 12
+    assert all(mgr.refcount[p] == 2 for p in donor_row)
+    assert cache.hits == 1 and cache.hit_tokens == 12
+    check_cache_invariants(mgr, cache)
+    mgr.free(1)
+    assert all(mgr.refcount[p] == 1 for p in donor_row)
+
+    # max_tokens caps the match page-granularly (11 // 4 -> 2 pages):
+    # admission passes total-1 so a full-prompt hit still prefills the
+    # last position (sampling needs its logits)
+    assert cache.attach(2, list(toks), max_tokens=11) == 8
+    assert mgr.lens[2] == 8
+    mgr.free(2)
+
+    # divergence mid-prefix: only the agreeing pages are shared
+    assert cache.attach(3, toks[:6] + [77] * 6, max_tokens=11) == 4
+    mgr.free(3)
+    check_cache_invariants(mgr, cache)
+
+
+def test_attach_miss_and_duplicate_insert_dedupes():
+    mgr, cache = _mgr_cache()
+    toks = [5] * 8
+    assert mgr.reserve(0, 8)
+    cache.insert(toks, mgr.tables[0], written=8)
+    assert cache.attach(1, [6] * 8, max_tokens=7) == 0
+    assert cache.misses == 1 and 1 not in mgr.tables
+    # a second owner of identical content: chunks already present keep
+    # the existing page; the duplicate is not indexed and recycles
+    assert mgr.reserve(2, 8)
+    dup_row = list(mgr.tables[2])
+    assert cache.insert(toks, dup_row, written=8) == 0
+    assert cache.resident_pages == 2
+    mgr.free(2)
+    assert all(p in mgr.free_list for p in dup_row)
+    mgr.free(0)
+    check_cache_invariants(mgr, cache)
+
+
+def test_attach_rejects_rid_with_live_table_row():
+    mgr, cache = _mgr_cache()
+    assert mgr.reserve(0, 8)
+    cache.insert([1] * 8, mgr.tables[0], written=8)
+    with pytest.raises(SchedulerInvariantError, match="attach"):
+        cache.attach(0, [1] * 8, max_tokens=7)
+
+
+# ---------------------------------------------------------------------------
+# eviction: LRU, leaf-first, refcount-aware, reclaim-on-demand
+# ---------------------------------------------------------------------------
+def test_reclaim_refuses_attached_chains():
+    mgr, cache = _mgr_cache()
+    toks = list(range(8))
+    assert mgr.reserve(0, 8)
+    cache.insert(toks, mgr.tables[0], written=8)
+    mgr.free(0)
+    cache.attach(1, toks, max_tokens=100)
+    assert cache.reclaimable() == 0, "attached pages are not capacity"
+    assert cache.reclaim(10) == 0
+    assert cache.resident_pages == 2
+    mgr.free(1)  # detach
+    assert cache.reclaimable() == 2
+    check_cache_invariants(mgr, cache)
+
+
+def test_reclaim_is_lru_and_leaf_first():
+    mgr, cache = _mgr_cache()
+    a_toks, b_toks = [1] * 8, [2] * 8
+    assert mgr.reserve(0, 8)
+    a_row = list(mgr.tables[0])
+    cache.insert(a_toks, a_row, written=8)
+    mgr.free(0)
+    assert mgr.reserve(1, 8)
+    b_row = list(mgr.tables[1])
+    cache.insert(b_toks, b_row, written=8)
+    mgr.free(1)
+    # touch chain A (attach bumps last_use): B becomes the LRU chain
+    cache.attach(2, a_toks, max_tokens=100)
+    mgr.free(2)
+
+    # leaf-first: one eviction takes B's *deepest* page, not its root
+    assert cache.reclaim(1) == 1
+    assert b_row[1] not in cache._page_node
+    assert b_row[0] in cache._page_node
+    check_cache_invariants(mgr, cache)
+    # next eviction finishes B before touching the fresher A
+    assert cache.reclaim(1) == 1
+    assert b_row[0] not in cache._page_node
+    assert a_row[0] in cache._page_node and a_row[1] in cache._page_node
+    assert cache.evicted_pages == 2
+    check_cache_invariants(mgr, cache)
+
+
+def test_reserve_reclaims_detached_pages_on_demand():
+    mgr, cache = _mgr_cache(pages=4)
+    toks = list(range(16))
+    assert mgr.reserve(0, 16)
+    cache.insert(toks, mgr.tables[0], written=16)
+    mgr.free(0)
+    assert len(mgr.free_list) == 0, "cache holds the whole pool"
+    assert mgr.available_pages == 4, "detached cache counts as capacity"
+    # a fresh reservation forces LRU eviction inside reserve()
+    assert mgr.reserve(1, 8)
+    assert cache.evicted_pages == 2
+    # the *shallow* prefix survives (leaf-first keeps the trie a prefix)
+    assert cache.match(toks, max_tokens=100) != []
+    check_cache_invariants(mgr, cache)
+    mgr.free(1)
+    assert cache.clear() == 2
+    assert len(mgr.free_list) == mgr.num_pages
+    assert all(c == 0 for c in mgr.refcount)
+
+
+def test_fork_and_cache_compose():
+    """`fork` aliasing and cache residency stack on the same refcounts:
+    the generalized invariant holds through fork / free / retain."""
+    mgr, cache = _mgr_cache()
+    toks = [3] * 8
+    assert mgr.reserve(0, 8)
+    row = list(mgr.tables[0])
+    cache.insert(toks, row, written=8)
+    assert mgr.fork(0, 1) is True
+    assert all(mgr.refcount[p] == 3 for p in row)  # 2 tables + residency
+    check_cache_invariants(mgr, cache)
+    mgr.free(0)
+    mgr.free(1)
+    assert all(mgr.refcount[p] == 1 for p in row)  # retained
+    check_cache_invariants(mgr, cache)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: admission attach, retain-on-release
+# ---------------------------------------------------------------------------
+def test_scheduler_admit_attaches_and_retains_on_finish():
+    mgr, cache = _mgr_cache()
+    sched = Scheduler(mgr, max_slots=2, max_seq_len=64, prefix_cache=cache)
+    a = Request(prompt=list(range(12)), max_new_tokens=4)
+    sched.add(a)
+    assert len(sched.admit()) == 1
+    assert a.cached_prefix == 0, "cold cache: no attach"
+    a_row = list(mgr.tables[a.rid])
+    sched.finish(a)  # RUNNING row: written = min(lens, total-1) = 11
+    assert cache.resident_pages == 2
+    check_cache_invariants(mgr, cache, sched)
+
+    b = Request(prompt=list(range(12)), max_new_tokens=4)
+    sched.add(b)
+    assert len(sched.admit()) == 1
+    assert b.cached_prefix == 8 and b.prefill_pos == 8
+    assert mgr.tables[b.rid][:2] == a_row[:2], "hit must alias donor pages"
+    assert mgr.lens[b.rid] == 12, "suffix reserved past the match"
+    check_cache_invariants(mgr, cache, sched)
+    sched.finish(b)
+    check_cache_invariants(mgr, cache, sched)
+
+
+def test_scheduler_full_prompt_hit_still_prefills_one_position():
+    mgr, cache = _mgr_cache()
+    sched = Scheduler(mgr, max_slots=2, max_seq_len=64, prefix_cache=cache,
+                      prefill_chunk=4)
+    prompt = [7] * 8  # exactly 2 pages, both will be cached
+    a = Request(prompt=list(prompt), max_new_tokens=4)
+    sched.add(a)
+    sched.admit()  # first chunk (4 tokens) reserved
+    a.prefill_pos = 4  # ...and "run" by the engine
+    assert sched.grow_prefill(a)  # second chunk reserved
+    a.prefill_pos = 8
+    sched.finish(a)  # PREFILLING row: written = prefill_pos = 8
+    assert cache.resident_pages == 2
+
+    b = Request(prompt=list(prompt), max_new_tokens=4)
+    sched.add(b)
+    sched.admit()
+    # the cap (total-1 = 7 tokens -> 1 page) leaves the last page to
+    # prefill so its logits exist for the first sample
+    assert b.cached_prefix == 4 and b.prefill_pos == 4
+    assert b.prefill_pos < b.total_len
+    check_cache_invariants(mgr, cache, sched)
+
+
+def test_scheduler_preempt_retains_then_reattaches():
+    mgr, cache = _mgr_cache(pages=8)
+    sched = Scheduler(mgr, max_slots=2, max_seq_len=256, headroom_pages=1,
+                      prefill_chunk=8, prefix_cache=cache)
+    a = Request(prompt=[4] * 20, max_new_tokens=4)
+    sched.add(a)
+    sched.admit()  # first chunk (8 tokens) reserved
+    a.prefill_pos = 8
+    assert sched.grow_prefill(a)  # second chunk reserved
+    a.prefill_pos = 16  # two chunks written: 4 full pages
+    sched._preempt(a)
+    assert a.status is Status.PREEMPTED and a.prefill_pos == 0
+    assert cache.resident_pages == 4, "preempted prefix retained"
+    check_cache_invariants(mgr, cache, sched)
+    # re-admission attaches to its own retained pages: near-zero re-prefill
+    assert len(sched.admit()) == 1
+    assert a.cached_prefix == 16 and a.prefill_pos == 16
+    check_cache_invariants(mgr, cache, sched)
+
+
+# ---------------------------------------------------------------------------
+# engine gates: configurations where page sharing would be unsound
+# ---------------------------------------------------------------------------
+def test_engine_rejects_unsound_configs():
+    cfg = get_smoke("llama2-7b")
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, paged=False, prefix_cache=True, max_slots=2,
+               max_seq_len=32)
+    with pytest.raises(ValueError, match="window"):
+        Engine(cfg.replace(layer_pattern="AW", window=12), prefix_cache=True,
+               max_slots=2, max_seq_len=32)
+    with pytest.raises(ValueError, match="cross"):
+        Engine(get_smoke("whisper-medium"), paged=True, prefix_cache=True,
+               max_slots=2, max_seq_len=32)
+    # recurrentgemma's pattern is RW: its window gate fires first, so use
+    # the window-free recurrent config to reach the recurrence gate
+    with pytest.raises(ValueError, match="recurrent"):
+        Engine(get_smoke("xlstm-350m"), paged=True, prefix_cache=True,
+               max_slots=2, max_seq_len=32)
+    with pytest.raises(ValueError, match="window"):
+        Engine(get_smoke("recurrentgemma-9b"), paged=True, prefix_cache=True,
+               max_slots=2, max_seq_len=32)
+
+
+# ---------------------------------------------------------------------------
+# engine equality: cache-on output == cache-off output (greedy, <= 1e-5
+# logit agreement makes the argmax chain identical)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def base_engine():
+    cfg = get_smoke("llama2-7b")
+    eng = Engine(cfg, max_slots=2, max_seq_len=64,
+                 rng=jax.random.PRNGKey(7))
+    return eng
+
+
+def _new_engine(base, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq_len", 64)
+    kw.setdefault("rng", jax.random.PRNGKey(11))
+    return Engine(base.cfg, params=base.params, **kw)
+
+
+def _run_checked(eng, reqs, max_steps=400):
+    """Drive requests to completion, asserting the cache-aware allocator
+    invariants after every engine step."""
+    for r in reqs:
+        eng.add_request(r)
+    for _ in range(max_steps):
+        if all(r.done for r in reqs):
+            break
+        eng.step()
+        if eng.prefix_cache is not None:
+            check_cache_invariants(eng.mgr, eng.prefix_cache, eng.scheduler)
+    assert all(r.done for r in reqs)
+    return reqs
+
+
+HEAD = [9] * 24  # shared "system prompt" head (3 pages at page_size 8)
+
+
+def test_engine_monolithic_warm_hit_matches_cold(base_engine):
+    tails = ([], [1, 2, 3, 4, 5])
+    mk = lambda tail: Request(prompt=HEAD + list(tail), max_new_tokens=6)
+
+    off = _new_engine(base_engine)
+    ref_a = off.generate([mk(tails[0])])[0]
+    ref_b = off.generate([mk(tails[1])])[0]
+
+    on = _new_engine(base_engine, prefix_cache=True)
+    a = _run_checked(on, [mk(tails[0])])[0]
+    b = _run_checked(on, [mk(tails[1])])[0]
+    assert a.status is Status.FINISHED and b.status is Status.FINISHED
+    assert a.output == ref_a.output, "cold request must match cache-off"
+    assert b.cached_prefix > 0, "warm request never hit"
+    assert b.output == ref_b.output, "hit request must match cache-off"
+    rep = on.robustness_report()
+    assert rep["prefix_hits"] >= 1
+    assert rep["prefix_hit_tokens"] >= b.cached_prefix
+    mem = on.memory_report()
+    assert mem["cached_pages"] > 0
+    assert mem["reclaimable_pages"] == mem["cached_pages"], (
+        "all requests done: every cached page must be detached")
+
+
+def test_engine_chunked_warm_hit_matches_cold(base_engine):
+    mk = lambda t: Request(prompt=HEAD + [5] * t, max_new_tokens=5)
+    off = _new_engine(base_engine, prefill_chunk=8)
+    ref_a = off.generate([mk(0)])[0]
+    ref_b = off.generate([mk(9)])[0]
+
+    on = _new_engine(base_engine, prefill_chunk=8, prefix_cache=True)
+    a = _run_checked(on, [mk(0)])[0]
+    b = _run_checked(on, [mk(9)])[0]
+    assert a.output == ref_a.output
+    assert b.cached_prefix > 0
+    assert b.output == ref_b.output
+    assert on.robustness_report()["prefix_hits"] >= 1
+
+
+def test_engine_progressive_insert_hits_midprefill_donor(base_engine):
+    """A request admitted while the donor is still PREFILLING attaches to
+    the donor's already-inserted pages (progressive insert), and both
+    outputs match the cache-off run."""
+    prompt = [3] * 40
+    mk = lambda: Request(prompt=list(prompt), max_new_tokens=4)
+    off = _new_engine(base_engine, prefill_chunk=8)
+    ref_a, ref_b = off.generate([mk(), mk()])
+
+    on = _new_engine(base_engine, prefill_chunk=8, prefix_cache=True)
+    a = mk()
+    on.add_request(a)
+    for _ in range(3):  # a few chunks land; a is still mid-prefill
+        on.step()
+    assert a.status is Status.PREFILLING and a.prefill_pos >= 16
+    b = mk()
+    _run_checked(on, [b], max_steps=200)
+    for _ in range(100):
+        if a.done:
+            break
+        on.step()
+    assert a.done and b.done
+    assert b.cached_prefix > 0, "mid-prefill donor pages never hit"
+    assert a.output == ref_a.output
+    assert b.output == ref_b.output
+    check_cache_invariants(on.mgr, on.prefix_cache, on.scheduler)
+
+
+def test_engine_eviction_races_admission_losslessly(base_engine):
+    """Cold admission against a pool the cache has entirely absorbed:
+    ``reserve`` must evict LRU detached pages mid-admission and the new
+    request's output must still match the cache-off engine."""
+    ps = base_engine.cfg.page_size
+    # pool == pages_per_seq (the floor): 8 pages at max_seq_len 64
+    off = _new_engine(base_engine, pool_tokens=64)
+    warm_p, cold_p = [3] * 5 * ps, [4] * 7 * ps
+    ref = off.generate([Request(prompt=list(cold_p), max_new_tokens=2)])[0]
+
+    on = _new_engine(base_engine, pool_tokens=64, prefix_cache=True)
+    _run_checked(on, [Request(prompt=list(warm_p), max_new_tokens=2)])
+    assert on.prefix_cache.resident_pages >= 5
+    free_before = len(on.mgr.free_list)
+    r = _run_checked(on, [Request(prompt=list(cold_p), max_new_tokens=2)])[0]
+    assert r.status is Status.FINISHED
+    assert r.output == ref.output
+    assert on.prefix_cache.evicted_pages > 0, (
+        f"admission never forced eviction (free before: {free_before})")
+
+
+def test_engine_pressure_with_attached_requests_matches_cold(base_engine):
+    """Two warm-hit requests with distinct tails on a minimum-size pool:
+    stalls/preemptions of cache-attached requests must stay output-
+    transparent (re-admission re-attaches to the retained prefix)."""
+    ps = base_engine.cfg.page_size
+    head = [7] * 3 * ps
+    # 8 decode tokens: both requests are mid-decode past page 5 at the
+    # same time, so peak live demand (3 shared + 3 + 3 pages) exceeds the
+    # 8-page pool and eviction alone cannot save it (every resident page
+    # is attached) — a stall or preemption is forced
+    mk = lambda tail_tok: Request(prompt=head + [tail_tok] * 2 * ps,
+                                  max_new_tokens=8)
+    off = _new_engine(base_engine, max_slots=1)
+    ref_w = off.generate([Request(prompt=list(head), max_new_tokens=2)])[0]
+    ref_a = off.generate([mk(11)])[0]
+    ref_b = off.generate([mk(12)])[0]
+
+    on = _new_engine(base_engine, max_slots=3, pool_tokens=8 * ps,
+                     prefill_chunk=ps, prefix_cache=True)
+    w = _run_checked(on, [Request(prompt=list(head), max_new_tokens=2)])[0]
+    assert w.output == ref_w.output
+    assert on.prefix_cache.resident_pages >= 3, "head never cached"
+    a, b = _run_checked(on, [mk(11), mk(12)], max_steps=600)
+    assert a.status is Status.FINISHED and b.status is Status.FINISHED
+    assert a.cached_prefix > 0 and b.cached_prefix > 0
+    assert a.output == ref_a.output
+    assert b.output == ref_b.output
+    rep = on.robustness_report()
+    assert rep["preempted"] + rep["prefill_stalls"] >= 1, (
+        "pool pressure never materialised: the test lost its point")
+    # drain the cache: the pool must come back whole
+    assert on.mgr.used_pages == on.prefix_cache.resident_pages
+    on.prefix_cache.clear()
+    assert on.mgr.used_pages == 0
+    assert sorted(on.mgr.free_list) == list(range(on.num_pages))
+    assert all(c == 0 for c in on.mgr.refcount)
+
+
+def test_engine_cancel_and_fork_with_cache(base_engine):
+    """Cancellation retains written pages; fork composes with residency
+    refcounts; invariants hold throughout."""
+    ps = base_engine.cfg.page_size
+    on = _new_engine(base_engine, max_slots=3, prefix_cache=True,
+                     prefill_chunk=ps)
+    long_req = Request(prompt=[6] * 5 * ps, max_new_tokens=4)
+    on.add_request(long_req)
+    for _ in range(3):
+        on.step()
+    assert long_req.status is Status.PREFILLING
+    assert long_req.prefill_pos >= 2 * ps
+    assert on.cancel_request(long_req.rid)
+    check_cache_invariants(on.mgr, on.prefix_cache, on.scheduler)
+    assert on.prefix_cache.resident_pages >= 2, (
+        "cancelled mid-prefill request must retain its written pages")
+
+    # same prompt again: hits the cancelled request's retained prefix
+    redo = Request(prompt=[6] * 5 * ps, max_new_tokens=4)
+    _run_checked(on, [redo])
+    assert redo.cached_prefix > 0
+
+    # fork a running request while the cache holds shares of its pages
+    parent = Request(prompt=[6] * 5 * ps, max_new_tokens=8)
+    on.add_request(parent)
+    while parent.status is not Status.RUNNING:
+        on.step()
+    child = on.fork_request(parent, max_new_tokens=4)
+    check_cache_invariants(on.mgr, on.prefix_cache, on.scheduler)
+    for _ in range(200):
+        if parent.done and child.done:
+            break
+        on.step()
+    assert parent.status is Status.FINISHED
+    assert child.status is Status.FINISHED
+    check_cache_invariants(on.mgr, on.prefix_cache, on.scheduler)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance stress: 250 steps of admit/attach/evict/preempt/cancel
+# with the generalized invariants asserted after every step
+# ---------------------------------------------------------------------------
+def test_prefix_cache_scheduler_stress_invariants():
+    rnd = random.Random(0xFACE)
+    mgr = HostPageManager(num_pages=24, page_size=4)
+    cache = PrefixCache(mgr)
+    sched = Scheduler(mgr, max_slots=4, max_seq_len=256, headroom_pages=1,
+                      prefill_chunk=8, prefix_cache=cache)
+    heads = ([1] * 12, [2] * 20, [3] * 8)  # shared system-prompt menu
+    all_reqs = []
+
+    def submit():
+        head = rnd.choice(heads)
+        tail = [rnd.randrange(10, 90) for _ in range(rnd.randint(0, 12))]
+        r = Request(prompt=list(head) + tail,
+                    max_new_tokens=rnd.randint(2, 10))
+        all_reqs.append(r)
+        sched.add(r)
+
+    def drive_prefill_chunks():
+        # mirror Engine._prefill_chunk_step (full chunk per row: the
+        # global budget is an engine concern; the allocator paths are
+        # identical either way)
+        for r in sorted(sched.running.values(), key=lambda x: x.rid):
+            if r.status is not Status.PREFILLING:
+                continue
+            if sched.running.get(r.slot) is not r:
+                continue
+            if not sched.grow_prefill(r):
+                continue
+            if sched.running.get(r.slot) is not r:
+                continue
+            r.prefill_pos = min(r.prefill_pos + sched.prefill_chunk,
+                                r.total_len)
+            if r.prefill_pos >= r.total_len:
+                r.status = Status.RUNNING
+
+    for _ in range(3):
+        submit()
+    for step in range(250):
+        if len(sched.waiting) < 2 and rnd.random() < 0.6:
+            submit()
+        sched.admit()
+        check_cache_invariants(mgr, cache, sched)
+        drive_prefill_chunks()
+        check_cache_invariants(mgr, cache, sched)
+        if any(r.status is Status.RUNNING for r in sched.running.values()):
+            sched.extend_for_decode()
+            for r in sched.running.values():
+                if r.status is Status.RUNNING:
+                    r.output.append(0)
+            check_cache_invariants(mgr, cache, sched)
+        live = [r for r in all_reqs
+                if not r.done and r.status is not Status.PREEMPTED]
+        if live and rnd.random() < 0.05:
+            sched.cancel(rnd.choice(live))
+            check_cache_invariants(mgr, cache, sched)
+        for r in list(sched.running.values()):
+            if (r.status is Status.RUNNING
+                    and len(r.output) >= r.max_new_tokens):
+                sched.finish(r)
+        check_cache_invariants(mgr, cache, sched)
+        sched.failed_events.clear()
+
+    # the schedule must have exercised every hard path
+    assert cache.hits >= 5, "stress never hit the cache"
+    assert cache.evicted_pages >= 1, "stress never evicted"
+    assert sched.preempted >= 1, "stress never preempted"
+    assert sched.cancelled >= 2, "stress never cancelled"
+
+    # drain, then clear the cache: the pool must come back whole
+    for _ in range(2000):
+        if not sched.has_work:
+            break
+        sched.admit()
+        drive_prefill_chunks()
+        if any(r.status is Status.RUNNING for r in sched.running.values()):
+            sched.extend_for_decode()
+            for r in sched.running.values():
+                if r.status is Status.RUNNING:
+                    r.output.append(0)
+        for r in list(sched.running.values()):
+            if (r.status is Status.RUNNING
+                    and len(r.output) >= r.max_new_tokens):
+                sched.finish(r)
+        check_cache_invariants(mgr, cache, sched)
+    assert not sched.has_work
+    assert mgr.used_pages == cache.resident_pages
+    cache.clear()
+    assert len(mgr.free_list) == mgr.num_pages
+    assert all(c == 0 for c in mgr.refcount)
+    assert cache.resident_pages == 0

@@ -135,6 +135,49 @@ def test_fork_on_dry_pool_rolls_back():
     assert all(mgr2.refcount[p] == 2 for p in mgr2.tables[0])
 
 
+def test_fork_from_unknown_src_raises_invariant_error():
+    """`fork` from a rid with no table row (never reserved, already
+    freed, or preempted) is a scheduler invariant violation and must
+    raise a structured error naming the rid — pre-fix it escaped as a
+    bare ``KeyError`` from the table lookup, indistinguishable from an
+    allocator bug."""
+    from repro.errors import SchedulerInvariantError
+
+    mgr = HostPageManager(num_pages=4, page_size=4)
+    with pytest.raises(SchedulerInvariantError, match="unknown rid 99"):
+        mgr.fork(99, 1)
+
+    # fork-after-free is the same violation (the preempt/fork race)
+    assert mgr.reserve(0, 8)
+    mgr.free(0)
+    with pytest.raises(SchedulerInvariantError, match="unknown rid 0"):
+        mgr.fork(0, 1)
+    # nothing leaked by the refused forks
+    assert len(mgr.free_list) == mgr.num_pages
+    assert not mgr.tables and not mgr.lens
+
+
+def test_double_free_after_fork():
+    """Freeing a fork child twice must fail loudly on the second free and
+    leave the parent's shared pages (and the pool accounting) intact."""
+    from repro.errors import SchedulerInvariantError
+
+    mgr = HostPageManager(num_pages=4, page_size=4)
+    assert mgr.reserve(0, 8)
+    assert mgr.fork(0, 1) is True
+    parent_pages = list(mgr.tables[0])
+    mgr.free(1)
+    assert all(mgr.refcount[p] == 1 for p in parent_pages)
+    with pytest.raises(SchedulerInvariantError):
+        mgr.free(1)
+    # the double free must not have touched the parent's pages
+    assert mgr.tables[0] == parent_pages
+    assert all(mgr.refcount[p] == 1 for p in parent_pages)
+    assert mgr.used_pages == 2
+    mgr.free(0)
+    assert len(mgr.free_list) == mgr.num_pages
+
+
 def test_preempt_fork_stress_invariants():
     """The acceptance stress: oversubscribed pool, N steps of interleaved
     admits / decode-extends (with preemption) / forks / finishes, with the
