@@ -29,7 +29,16 @@
 #               chunked prefill, stalls, preemption and eviction racing
 #               admission.  Part of the tier-1 run too; its own target so
 #               CI names a prefix-cache break.
-#   verify      test-clean + test-gpu-interpret + test-faults +
+#   lint        replint, the project-native static-analysis suite
+#               (`python -m repro.analysis`): Pallas grid/BlockSpec
+#               contracts, knob threading, the structured-error taxonomy,
+#               tracer safety in kernels/jitted steps, allocator refcount
+#               discipline.  Fails on any finding that is neither
+#               suppressed in source nor in replint_baseline.json.
+#   lint-changed
+#               the same rules scoped to .py files changed vs git —
+#               the fast pre-push loop
+#   verify      lint + test-clean + test-gpu-interpret + test-faults +
 #               test-prefix + bench-fast
 
 PY ?= python
@@ -43,7 +52,7 @@ KNOWN_FAIL =
 GPU_GATE_SUITES = tests/test_kernels_paged.py tests/test_combine_conformance.py
 
 .PHONY: test test-clean test-gpu-interpret test-chunked test-faults \
-        test-prefix bench-fast verify
+        test-prefix bench-fast lint lint-changed verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -76,4 +85,12 @@ test-prefix:
 bench-fast:
 	$(PY) -m benchmarks.run --fast --only fig4_decode,tbl_decode_blocks,mixed_batch
 
-verify: test-clean test-gpu-interpret test-faults test-prefix bench-fast
+# replint: the cross-layer contracts, proven at lint time.  See
+# `python -m repro.analysis --list-rules` and README "Static analysis".
+lint:
+	$(PY) -m repro.analysis
+
+lint-changed:
+	$(PY) -m repro.analysis --changed-only
+
+verify: lint test-clean test-gpu-interpret test-faults test-prefix bench-fast

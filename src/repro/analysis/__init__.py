@@ -1,0 +1,52 @@
+"""replint: project-native static analysis for the paged-serving stack.
+
+Generic linters cannot see this repo's cross-layer contracts — that a
+Pallas grid's rank must match its ``dimension_semantics``, that a kernel
+knob accepted at the engine API must survive every hop down to the
+``pallas_call``, that failures must speak the ``repro.errors`` taxonomy so
+the engine can route them per request.  ``replint`` encodes those
+contracts as AST/call-graph rules and proves them at lint time.
+
+Usage::
+
+    python -m repro.analysis                  # lint src/repro, text report
+    python -m repro.analysis --json           # machine-readable report
+    python -m repro.analysis --rules pallas-contract,knob-threading
+    python -m repro.analysis --changed-only   # only files touched vs git
+    python -m repro.analysis --write-baseline # grandfather current findings
+
+Suppress a finding at the source with a trailing (or preceding-line)
+comment::
+
+    raise ValueError("boom")  # replint: disable=error-discipline -- why
+
+See ``repro.analysis.core`` for the registry/baseline machinery and
+``repro.analysis.checkers`` for the rules themselves.
+"""
+
+from repro.analysis import checkers  # noqa: F401  (registers the rules)
+from repro.analysis.core import (BASELINE_VERSION, REPORT_VERSION, FileContext,
+                                 Finding, FuncSig, Project, Rule, RULES,
+                                 active, analyze_paths, apply_baseline,
+                                 collect_files, load_baseline, register,
+                                 render_json, render_text, write_baseline)
+
+__all__ = [
+    "BASELINE_VERSION",
+    "REPORT_VERSION",
+    "FileContext",
+    "Finding",
+    "FuncSig",
+    "Project",
+    "Rule",
+    "RULES",
+    "active",
+    "analyze_paths",
+    "apply_baseline",
+    "collect_files",
+    "load_baseline",
+    "register",
+    "render_json",
+    "render_text",
+    "write_baseline",
+]

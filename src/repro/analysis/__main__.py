@@ -1,0 +1,137 @@
+"""``python -m repro.analysis`` — the replint driver.
+
+Exit status: 0 when every finding is suppressed or baselined, 1 when any
+gating finding remains, 2 on usage errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.core import (RULES, active, analyze_paths, apply_baseline,
+                                 load_baseline, render_json, render_text,
+                                 write_baseline)
+
+DEFAULT_PATHS = ("src/repro",)
+DEFAULT_BASELINE = "replint_baseline.json"
+
+
+def _repo_root() -> Path:
+    """Nearest ancestor holding a .git (or pyproject/Makefile) marker."""
+    cur = Path.cwd().resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / ".git").exists() or (cand / "Makefile").exists():
+            return cand
+    return cur
+
+
+def _changed_files(root: Path) -> list:
+    """Tracked-but-modified + staged + untracked .py files vs git.
+
+    Seeded-violation fixtures (tests/fixtures/) are excluded: they are
+    *supposed* to light the rules up and are gated by tests, not lint.
+    """
+    try:
+        out = subprocess.run(
+            ["git", "status", "--porcelain", "-uall"], cwd=root,
+            capture_output=True, text=True, check=True).stdout
+    except (OSError, subprocess.CalledProcessError) as e:
+        print(f"replint: --changed-only needs git ({e})", file=sys.stderr)
+        return []
+    files = []
+    for line in out.splitlines():
+        if len(line) < 4:
+            continue
+        path = line[3:].strip()
+        if " -> " in path:  # rename: take the new side
+            path = path.split(" -> ", 1)[1]
+        path = path.strip('"')
+        if not path.endswith(".py") or not (root / path).exists():
+            continue
+        if "fixtures" in Path(path).parts:
+            continue
+        files.append(root / path)
+    return files
+
+
+def main(argv=None) -> int:
+    # import for side effect: registers the built-in rules before --list-rules
+    from repro.analysis import checkers  # noqa: F401
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="replint: project-native static analysis for the "
+                    "paged-serving stack")
+    parser.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                        help="files or directories to lint "
+                             "(default: src/repro)")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated subset of rules to run")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the registered rules and exit")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the machine-readable JSON report")
+    parser.add_argument("--baseline", default=DEFAULT_BASELINE,
+                        help="baseline file (default: %(default)s; "
+                             "'' disables)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write current unsuppressed findings to the "
+                             "baseline file and exit 0")
+    parser.add_argument("--changed-only", action="store_true",
+                        help="lint only .py files changed vs git "
+                             "(staged, unstaged, untracked)")
+    parser.add_argument("--show-suppressed", action="store_true",
+                        help="include suppressed/baselined findings in the "
+                             "text report")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(r) for r in RULES) if RULES else 0
+        for name in sorted(RULES):
+            print(f"{name:<{width}}  {RULES[name].doc}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            print(f"replint: unknown rule(s): {', '.join(unknown)} "
+                  f"(see --list-rules)", file=sys.stderr)
+            return 2
+
+    root = _repo_root()
+    files = None
+    if args.changed_only:
+        files = _changed_files(root)
+        if not files:
+            print("replint: no changed .py files")
+            return 0
+
+    findings = analyze_paths(args.paths, root, rules=rules, files=files)
+
+    baseline_path = (root / args.baseline) if args.baseline else None
+    if args.write_baseline:
+        if baseline_path is None:
+            print("replint: --write-baseline needs --baseline",
+                  file=sys.stderr)
+            return 2
+        write_baseline(findings, baseline_path)
+        n = sum(not f.suppressed for f in findings)
+        print(f"replint: wrote {n} finding(s) to {baseline_path}")
+        return 0
+    if baseline_path is not None:
+        apply_baseline(findings, load_baseline(baseline_path))
+
+    if args.json:
+        print(render_json(findings, rules or sorted(RULES)))
+    else:
+        print(render_text(findings, show_suppressed=args.show_suppressed))
+    return 1 if active(findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

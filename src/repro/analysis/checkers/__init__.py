@@ -1,0 +1,19 @@
+"""Built-in replint checkers.
+
+Importing this package registers every rule into
+``repro.analysis.core.RULES`` (each module calls ``@register`` at import
+time).  ``analyze_paths`` imports it before selecting rules, so rules are
+always available to the driver and to tests.
+"""
+
+from repro.analysis.checkers import (allocator_discipline,  # noqa: F401
+                                     error_discipline, knob_threading,
+                                     pallas_contract, tracer_safety)
+
+__all__ = [
+    "allocator_discipline",
+    "error_discipline",
+    "knob_threading",
+    "pallas_contract",
+    "tracer_safety",
+]

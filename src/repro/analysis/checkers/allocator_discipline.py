@@ -1,0 +1,145 @@
+"""allocator-discipline: the refcount invariant has exactly two owners.
+
+The serving allocator's generalized invariant (PR 7) is
+
+    refcount[p] == occurrences of p across table rows + (1 if cache-resident)
+
+and it only stays provable because *every* mutation of ``refcount`` lives
+inside ``HostPageManager`` or ``PrefixCache`` methods.  Checks:
+
+  1. any assignment / augmented assignment / mutating method call on a
+     ``refcount`` attribute outside those classes is a violation — callers
+     go through ``reserve``/``free``/``fork``/``attach``/``insert``;
+  2. rollback-before-raise: a function that calls an allocator mutator
+     (``reserve``/``extend``/``attach``/``insert``/``fork`` on an
+     allocator receiver) and can still raise *afterwards* must contain a
+     rollback path — an undo call (``free``/``release``/``reclaim``/
+     ``_evict``…), a direct refcount decrement, or a ``try`` block —
+     otherwise the pages acquired by the earlier steps leak when the
+     raise fires mid-mutation (the fork-refcount-leak bug class).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.core import (FileContext, Finding, Project, attr_last,
+                                 register)
+
+ALLOWED_CLASSES = {"HostPageManager", "PrefixCache", "FaultyPageManager"}
+
+# allocator mutators: multi-step mutation entry points
+MUTATORS = {"reserve", "extend", "attach", "insert", "fork"}
+# receivers those mutators are allocator calls on (page manager handles,
+# the prefix cache, or self inside an allocator class)
+RECEIVERS = {"mgr", "manager", "cache", "prefix_cache", "self",
+             "HostPageManager", "PrefixCache"}
+# evidence of a rollback path
+UNDO_CALLS = {"free", "release", "reclaim", "rollback", "detach", "_evict",
+              "_evict_chain", "pop"}
+_MUTATING_METHODS = {"append", "pop", "clear", "extend", "insert", "remove"}
+
+
+def _enclosing_class(node: ast.AST) -> Optional[str]:
+    cur = getattr(node, "_replint_parent", None)
+    while cur is not None:
+        if isinstance(cur, ast.ClassDef):
+            return cur.name
+        cur = getattr(cur, "_replint_parent", None)
+    return None
+
+
+def _touches_refcount(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "refcount":
+            return True
+    return False
+
+
+def _receiver_name(call: ast.Call) -> str:
+    """Terminal receiver of ``a.b.mgr.reserve(...)`` -> 'mgr'."""
+    func = call.func
+    if isinstance(func, ast.Attribute):
+        return attr_last(func.value)
+    return ""
+
+
+def _is_allocator_mutation(call: ast.Call, in_allowed_class: bool) -> bool:
+    name = attr_last(call.func)
+    if name not in MUTATORS:
+        return False
+    recv = _receiver_name(call)
+    if recv in ("mgr", "manager", "cache", "prefix_cache"):
+        return True
+    if recv in ("self", "HostPageManager", "PrefixCache"):
+        return in_allowed_class
+    return False
+
+
+@register(
+    "allocator-discipline",
+    "refcount mutated only inside HostPageManager/PrefixCache; allocator "
+    "mutations have a rollback path before any later raise",
+)
+def check(ctx: FileContext, project: Project) -> List[Finding]:
+    out: List[Finding] = []
+
+    def finding(node: ast.AST, msg: str) -> None:
+        out.append(Finding(rule="allocator-discipline", path=ctx.path,
+                           line=node.lineno, col=node.col_offset,
+                           symbol=ctx.qualname(node), message=msg))
+
+    # 1. refcount mutations outside the allocator classes
+    for node in ast.walk(ctx.tree):
+        cls = _enclosing_class(node)
+        allowed = cls in ALLOWED_CLASSES
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            if any(_touches_refcount(t) for t in targets) and not allowed:
+                finding(node, "refcount mutated outside HostPageManager/"
+                              "PrefixCache — go through reserve/free/"
+                              "fork/attach so the invariant stays provable")
+        elif isinstance(node, ast.Call) and not allowed:
+            f = node.func
+            if isinstance(f, ast.Attribute) and \
+                    f.attr in _MUTATING_METHODS and \
+                    _touches_refcount(f.value):
+                finding(node, "refcount mutated outside HostPageManager/"
+                              "PrefixCache — go through reserve/free/"
+                              "fork/attach so the invariant stays provable")
+
+    # 2. rollback-before-raise per function
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        in_allowed = _enclosing_class(fn) in ALLOWED_CLASSES
+        mutator_lines = []
+        raise_nodes = []
+        has_rollback = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    _is_allocator_mutation(node, in_allowed):
+                mutator_lines.append(node.lineno)
+            elif isinstance(node, ast.Raise):
+                raise_nodes.append(node)
+            elif isinstance(node, ast.Try):
+                has_rollback = True
+            elif isinstance(node, ast.Call) and \
+                    attr_last(node.func) in UNDO_CALLS:
+                has_rollback = True
+            elif isinstance(node, ast.AugAssign) and \
+                    isinstance(node.op, ast.Sub) and \
+                    _touches_refcount(node.target):
+                has_rollback = True
+        if not mutator_lines or has_rollback:
+            continue
+        first_mut = min(mutator_lines)
+        late = [r for r in raise_nodes if r.lineno > first_mut]
+        if late:
+            finding(late[0],
+                    "raise after an allocator mutation (reserve/extend/"
+                    "attach at line %d) with no rollback path — free/undo "
+                    "the acquired pages before raising" % first_mut)
+    return out

@@ -1,0 +1,149 @@
+"""error-discipline: failures must speak the structured taxonomy.
+
+Scope: ``src/repro/{serving,core,distributed,models}`` — the layers whose
+failures are routed per request by the fault-tolerant engine (PR 6).
+
+Checks:
+
+  1. no bare builtin raises (``ValueError``, ``RuntimeError``, ...): every
+     raise must construct a ``repro.errors`` type (resolved through the
+     file's imports), so callers can catch ``EngineError`` and route it;
+  2. no silent except-swallow: an ``except:`` whose body is only
+     ``pass``/``continue``/``...`` hides the failure from the engine's
+     per-request error routing;
+  3. rid discipline: a structured raise inside a function that has a
+     request id in scope (a ``rid``/``seq_id``/``req`` parameter) must
+     carry ``rid=`` so the engine can fail *that* request.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.core import (FileContext, Finding, Project, attr_last,
+                                 attr_root, register)
+
+BANNED_BUILTINS = {"ValueError", "RuntimeError", "KeyError", "TypeError",
+                   "NotImplementedError", "Exception", "AssertionError",
+                   "IndexError", "OSError", "IOError"}
+
+_RID_PARAMS = {"rid", "seq_id", "req"}
+
+
+def _errors_names(ctx: FileContext) -> Set[str]:
+    """Names this file imported from ``repro.errors`` (plus module-alias
+    access like ``errors.PoolExhausted``)."""
+    names: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "repro.errors":
+            names.update(a.asname or a.name for a in node.names)
+        elif isinstance(node, ast.ImportFrom) and node.module == "repro":
+            names.update(a.asname or a.name for a in node.names
+                         if a.name == "errors")
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro.errors":
+                    names.add((a.asname or "repro.errors").split(".")[0])
+    return names
+
+
+def _local_error_classes(ctx: FileContext, errors_names: Set[str]) -> Set[str]:
+    """Classes defined in-file whose base chains reach a taxonomy name."""
+    out: Set[str] = set()
+    classes = {n.name: n for n in ast.walk(ctx.tree)
+               if isinstance(n, ast.ClassDef)}
+    changed = True
+    while changed:
+        changed = False
+        for name, node in classes.items():
+            if name in out:
+                continue
+            for base in node.bases:
+                b = attr_last(base)
+                if b in errors_names or b in out:
+                    out.add(name)
+                    changed = True
+                    break
+    return out
+
+
+def _enclosing_function(node: ast.AST):
+    cur = getattr(node, "_replint_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = getattr(cur, "_replint_parent", None)
+    return None
+
+
+def _has_rid_in_scope(fn) -> bool:
+    if fn is None:
+        return False
+    a = fn.args
+    params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    return bool(params & _RID_PARAMS)
+
+
+@register(
+    "error-discipline",
+    "raises come from repro.errors (with rid= when in scope); "
+    "no silent except-swallow",
+    dirs=("serving", "core", "distributed", "models"),
+)
+def check(ctx: FileContext, project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    errors_names = _errors_names(ctx)
+    local_errors = _local_error_classes(ctx, errors_names)
+
+    def finding(node: ast.AST, msg: str) -> None:
+        out.append(Finding(rule="error-discipline", path=ctx.path,
+                           line=node.lineno, col=node.col_offset,
+                           symbol=ctx.qualname(node), message=msg))
+
+    for node in ast.walk(ctx.tree):
+        # 1 + 3: raise statements
+        if isinstance(node, ast.Raise):
+            exc = node.exc
+            if exc is None:
+                continue  # bare re-raise: fine
+            if isinstance(exc, ast.Name):
+                continue  # `raise e` of a caught exception: fine
+            if not isinstance(exc, ast.Call):
+                continue
+            name = attr_last(exc.func)
+            root = attr_root(exc.func)
+            structured = (name in errors_names or name in local_errors
+                          or root in errors_names)
+            if name in BANNED_BUILTINS and not structured:
+                finding(node, f"bare `raise {name}` — raise a structured "
+                              f"repro.errors type instead")
+                continue
+            if not structured:
+                finding(node, f"`raise {name}` does not come from "
+                              f"repro.errors — use (or add) a taxonomy "
+                              f"type so callers can route it")
+                continue
+            # 3: rid must travel when one is in scope
+            fn = _enclosing_function(node)
+            if _has_rid_in_scope(fn):
+                has_rid = any(kw.arg in ("rid", None)
+                              for kw in exc.keywords)
+                if not has_rid:
+                    finding(node, f"structured raise of {name} inside "
+                                  f"'{fn.name}' has a request id in scope "
+                                  f"but does not pass rid=")
+
+        # 2: silent except-swallow
+        elif isinstance(node, ast.ExceptHandler):
+            body = node.body
+            swallowed = all(
+                isinstance(s, (ast.Pass, ast.Continue)) or
+                (isinstance(s, ast.Expr) and
+                 isinstance(s.value, ast.Constant))
+                for s in body)
+            if swallowed:
+                finding(node, "silent except-swallow: handler only "
+                              "passes — re-raise, convert to a "
+                              "repro.errors type, or record the failure")
+    return out

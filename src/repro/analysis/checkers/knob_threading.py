@@ -1,0 +1,105 @@
+"""knob-threading: kernel knobs must flow through every layer.
+
+The serving stack threads a fixed set of tuning knobs end to end
+(kernel -> ops -> core -> models -> Engine):
+
+    backend, combine_mode, interpret, pages_per_block, num_splits,
+    q_block, prefill_chunk
+
+A function that *accepts* one of these and calls a callee that *also
+accepts it* without forwarding it silently pins the callee to its default
+— the bug class behind PR 5's per-shape recompile stall (a dropped
+``pages_per_block`` re-tuned every call).  This is a call-graph pass over
+the project's signature index:
+
+  * callees are resolved by bare name against every def in the analyzed
+    file set; a knob is only *required* when every candidate of that name
+    accepts it (ambiguity never produces a finding);
+  * a knob counts as forwarded when passed by keyword, covered by a
+    positional argument (per any candidate's parameter order), or when the
+    call splats ``**kwargs``;
+  * intentional drops carry ``# replint: disable=knob-threading -- reason``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.core import (FileContext, Finding, Project, attr_last,
+                                 register)
+
+KNOBS = ("backend", "combine_mode", "interpret", "pages_per_block",
+         "num_splits", "q_block", "prefill_chunk")
+
+# call targets that are never knob-threading edges: stdlib/jax plumbing
+# whose params coincidentally shadow knob names
+_IGNORED_CALLEES = {"partial", "jit", "get", "pop", "setdefault"}
+
+
+def _knob_params(node) -> set:
+    a = node.args
+    names = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    return names & set(KNOBS)
+
+
+def _call_covers(call: ast.Call, knob: str, project: Project,
+                 callee: str) -> bool:
+    """Does this call pass ``knob`` (kw, **splat, or positionally)?"""
+    for kw in call.keywords:
+        if kw.arg == knob:
+            return True
+        if kw.arg is None:  # **splat forwards everything
+            return True
+    if any(isinstance(a, ast.Starred) for a in call.args):
+        return True  # *splat may cover any position
+    n_pos = len(call.args)
+    for sig in project.signatures.get(callee, ()):
+        if knob in sig.positional:
+            # account for bound `self` on method calls (obj.m(...))
+            offset = 1 if (sig.positional and
+                           sig.positional[0] in ("self", "cls") and
+                           isinstance(call.func, ast.Attribute)) else 0
+            if sig.positional.index(knob) - offset < n_pos:
+                return True
+    return False
+
+
+@register(
+    "knob-threading",
+    "registered kernel knobs must be forwarded to knob-accepting callees",
+)
+def check(ctx: FileContext, project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        knobs = _knob_params(fn)
+        if not knobs:
+            continue
+        symbol = ctx.qualname(fn)
+        # walk the whole body, including closures: a nested helper still
+        # closes over the enclosing function's knob parameters
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            callee = attr_last(call.func)
+            if not callee or callee in _IGNORED_CALLEES \
+                    or callee == fn.name:
+                continue
+            candidates = project.signatures.get(callee)
+            if not candidates:
+                continue
+            # knob required only if EVERY candidate def accepts it
+            required = knobs & set.intersection(
+                *(sig.params for sig in candidates))
+            for knob in sorted(required):
+                if not _call_covers(call, knob, project, callee):
+                    out.append(Finding(
+                        rule="knob-threading", path=ctx.path,
+                        line=call.lineno, col=call.col_offset,
+                        symbol=symbol,
+                        message=f"'{symbol}' accepts knob '{knob}' but "
+                                f"calls '{callee}' (which accepts it) "
+                                f"without forwarding it"))
+    return out

@@ -1,0 +1,220 @@
+"""pallas-contract: every ``pl.pallas_call`` in ``kernels/`` honours the
+grid / BlockSpec / split-K partial contracts.
+
+Checks, per call site:
+
+  1. grid rank == ``dimension_semantics`` length (megacore contract —
+     a silent mismatch either crashes Mosaic late or drops parallelism);
+  2. every BlockSpec ``index_map`` takes exactly ``grid rank +
+     num_scalar_prefetch`` positional parameters (a ``*rest`` vararg
+     absorbs trailing prefetch operands);
+  3. a kernel wrapper emitting split-K partials (function name contains
+     ``partials``) must declare exactly three outputs — the ``(m, l, acc)``
+     contract shared by both backends and ``combine_partials`` — and all
+     three accumulators must be ``jnp.float32``.
+
+The checker resolves the project's real idioms statically: module/local
+constants for ``dimension_semantics``, local BlockSpec variables, helper
+lambdas returning BlockSpecs (``whole(arr)``, ``kv_spec(j)``), named
+index-map defs, and ``functools.partial``-bound index maps.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.core import (FileContext, Finding, Project, attr_last,
+                                 kwarg as _kw, register, resolve_name,
+                                 scope_env)
+
+
+def _env_for(ctx: FileContext, node: ast.AST) -> Dict[str, ast.AST]:
+    return scope_env(ctx, node)
+
+
+def _resolve(env: Dict[str, ast.AST], node: ast.AST) -> ast.AST:
+    return resolve_name(env, node)
+
+
+def _literal_int(env: Dict[str, ast.AST], node: ast.AST) -> Optional[int]:
+    node = _resolve(env, node)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _tuple_len(env: Dict[str, ast.AST], node: ast.AST) -> Optional[int]:
+    node = _resolve(env, node)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+def _index_map_arity(env: Dict[str, ast.AST],
+                     node: ast.AST) -> Optional[Tuple[int, bool]]:
+    """(positional arity, has_vararg) of an index_map expression.
+
+    ``functools.partial`` binds consume parameters: leading ones when
+    bound positionally, named ones when bound by keyword.
+    """
+    node = _resolve(env, node)
+    bound_pos = 0
+    bound_kw: set = set()
+    while isinstance(node, ast.Call) and attr_last(node.func) == "partial":
+        if not node.args:
+            return None
+        bound_pos += len(node.args) - 1
+        bound_kw |= {kw.arg for kw in node.keywords if kw.arg}
+        node = _resolve(env, node.args[0])
+    if isinstance(node, (ast.Lambda, ast.FunctionDef, ast.AsyncFunctionDef)):
+        a = node.args
+        pos = [p.arg for p in a.posonlyargs + a.args]
+        free = [p for p in pos[bound_pos:] if p not in bound_kw]
+        return len(free), a.vararg is not None
+    return None
+
+
+def _iter_blockspecs(env: Dict[str, ast.AST], node: Optional[ast.AST]):
+    """Yield every ``pl.BlockSpec(...)`` Call reachable from a specs
+    expression: lists/tuples, list concatenation, comprehensions, local
+    variables, and calls to local BlockSpec-factory lambdas/defs."""
+    if node is None:
+        return
+    node = _resolve(env, node)
+    if isinstance(node, (ast.List, ast.Tuple)):
+        for elt in node.elts:
+            yield from _iter_blockspecs(env, elt)
+    elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        yield from _iter_blockspecs(env, node.left)
+        yield from _iter_blockspecs(env, node.right)
+    elif isinstance(node, ast.ListComp):
+        yield from _iter_blockspecs(env, node.elt)
+    elif isinstance(node, ast.Call):
+        if attr_last(node.func) == "BlockSpec":
+            yield node
+        else:
+            # a call to a local factory (whole(arr), kv_spec(j)): resolve
+            # the factory and yield the BlockSpec its body constructs
+            factory = _resolve(env, node.func)
+            body = None
+            if isinstance(factory, ast.Lambda):
+                body = factory.body
+            elif isinstance(factory, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                rets = [s.value for s in ast.walk(factory)
+                        if isinstance(s, ast.Return) and s.value is not None]
+                body = rets[0] if len(rets) == 1 else None
+            if isinstance(body, ast.Call) and \
+                    attr_last(body.func) == "BlockSpec":
+                yield body
+
+
+def _check_call(ctx: FileContext, call: ast.Call,
+                symbol: str) -> List[Finding]:
+    env = _env_for(ctx, call)
+    out: List[Finding] = []
+
+    def finding(node: ast.AST, msg: str) -> None:
+        out.append(Finding(rule="pallas-contract", path=ctx.path,
+                           line=node.lineno, col=node.col_offset,
+                           symbol=symbol, message=msg))
+
+    grid_expr = _kw(call, "grid")
+    prefetch: Optional[int] = 0
+    in_specs = _kw(call, "in_specs")
+    out_specs = _kw(call, "out_specs")
+    grid_spec = _kw(call, "grid_spec")
+    if grid_spec is not None:
+        gs = _resolve(env, grid_spec)
+        if isinstance(gs, ast.Call):
+            grid_expr = _kw(gs, "grid")
+            in_specs = in_specs or _kw(gs, "in_specs")
+            out_specs = out_specs or _kw(gs, "out_specs")
+            nsp = _kw(gs, "num_scalar_prefetch")
+            prefetch = _literal_int(env, nsp) if nsp is not None else 0
+
+    rank = _tuple_len(env, grid_expr) if grid_expr is not None else None
+
+    # 1. dimension_semantics length == grid rank
+    cp = _kw(call, "compiler_params")
+    if cp is not None:
+        cp = _resolve(env, cp)
+        if isinstance(cp, ast.Call):
+            ds = _kw(cp, "dimension_semantics")
+            if ds is not None:
+                ds_len = _tuple_len(env, ds)
+                if rank is not None and ds_len is not None \
+                        and ds_len != rank:
+                    finding(ds, f"dimension_semantics has {ds_len} "
+                                f"entries but the grid has rank {rank}")
+
+    # 2. index_map arity == grid rank + num_scalar_prefetch
+    if rank is not None:
+        expected = rank + prefetch if prefetch is not None else None
+        for spec in list(_iter_blockspecs(env, in_specs)) + \
+                list(_iter_blockspecs(env, out_specs)):
+            imap = spec.args[1] if len(spec.args) > 1 \
+                else _kw(spec, "index_map")
+            if imap is None:
+                continue
+            arity = _index_map_arity(env, imap)
+            if arity is None:
+                continue
+            n, vararg = arity
+            if vararg:
+                if expected is not None and n > expected:
+                    finding(spec, f"index_map takes {n} positional "
+                                  f"params (+*args) but grid rank + "
+                                  f"scalar prefetch is only {expected}")
+                elif n < rank:
+                    finding(spec, f"index_map takes {n} positional "
+                                  f"params (+*args) but the grid alone "
+                                  f"has rank {rank}")
+            elif expected is not None and n != expected:
+                finding(spec, f"index_map takes {n} positional params "
+                              f"but grid rank ({rank}) + scalar prefetch "
+                              f"({prefetch}) = {expected}")
+            elif expected is None and n < rank:
+                finding(spec, f"index_map takes {n} positional params "
+                              f"but the grid alone has rank {rank}")
+
+    # 3. split-K partial emitters: three (m, l, acc) f32 outputs.
+    # ("combine" kernels *consume* partials and emit one merged tensor.)
+    if "partials" in symbol and "combine" not in symbol:
+        shape = _kw(call, "out_shape")
+        shape = _resolve(env, shape) if shape is not None else None
+        if isinstance(shape, (ast.List, ast.Tuple)):
+            if len(shape.elts) != 3:
+                finding(shape, f"split-K partials must emit exactly three "
+                               f"(m, l, acc) outputs, found "
+                               f"{len(shape.elts)}")
+            for elt in shape.elts:
+                elt = _resolve(env, elt)
+                if not isinstance(elt, ast.Call):
+                    continue
+                dt = elt.args[1] if len(elt.args) > 1 \
+                    else _kw(elt, "dtype")
+                if dt is not None and attr_last(dt) != "float32":
+                    finding(elt, "split-K partial accumulators must be "
+                                 "f32 (jnp.float32), found "
+                                 f"'{attr_last(dt) or ast.dump(dt)}'")
+        elif shape is not None:
+            finding(shape, "split-K partials must emit a list of three "
+                           "(m, l, acc) ShapeDtypeStructs")
+
+    return out
+
+
+@register(
+    "pallas-contract",
+    "pl.pallas_call grid/dimension_semantics/index_map/split-K contracts",
+    dirs=("kernels",),
+)
+def check(ctx: FileContext, project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and \
+                attr_last(node.func) == "pallas_call":
+            out.extend(_check_call(ctx, node, ctx.qualname(node)))
+    return out

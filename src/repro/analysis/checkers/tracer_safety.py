@@ -1,0 +1,261 @@
+"""tracer-safety: no host/trace confusion inside kernels and jitted steps.
+
+Target functions:
+
+  * **kernel bodies** — any function passed (directly or through
+    ``functools.partial``) as the first argument of a ``pl.pallas_call``.
+    Static values are the kw-only parameters (``functools.partial`` binds
+    them at trace time); everything positional is a Ref / traced value,
+    as is anything derived from ``pl.program_id``/``pl.num_programs``.
+  * **jitted step functions** — defs decorated with ``jax.jit`` (or
+    ``functools.partial(jax.jit, static_argnames=...)``), or referenced by
+    name in a ``jax.jit(fn, ...)`` call in the same file.  Static values
+    are the declared ``static_argnames``.
+
+Checks, inside a target function:
+
+  1. Python ``if``/``while`` on a traced value (concretization error at
+     trace time at best, silently-stale specialization at worst — use
+     ``jnp.where``/``lax.cond``/``pl.when``);
+  2. host escapes: ``.item()``, ``float()``/``int()``/``bool()`` on a
+     traced value, and ``np.*`` calls fed a traced value (``np.*`` on
+     static shapes/scalars is fine — that is host-side planning);
+  3. the int8-pool contract: a kernel that declares a ``kv_scale``
+     parameter must actually apply it to the gathered K/V tiles — a
+     kernel that reads int8 pages and never multiplies by ``kv_scale``
+     returns garbage at int8 serving time.
+
+Taint tracking is a per-function fixpoint over simple assignments;
+``.shape``/``.ndim``/``.dtype`` reads and ``len()`` are static (shape
+math on traced arrays is host-side and legal).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import (FileContext, Finding, Project, attr_last,
+                                 attr_root, dotted_name, kwarg, register,
+                                 resolve_name, scope_env)
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype"}
+_STATIC_CALLS = {"len", "range", "isinstance", "getattr", "hasattr", "type"}
+
+
+# ---------------------------------------------------------------------------
+# target discovery
+# ---------------------------------------------------------------------------
+def _kernel_defs(ctx: FileContext) -> Dict[str, ast.FunctionDef]:
+    """Defs passed as the kernel (first arg) of a pallas_call, resolved
+    through local variables and functools.partial."""
+    defs = {n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    out: Dict[str, ast.FunctionDef] = {}
+    for call in ast.walk(ctx.tree):
+        if not (isinstance(call, ast.Call)
+                and attr_last(call.func) == "pallas_call" and call.args):
+            continue
+        env = scope_env(ctx, call)
+        target = resolve_name(env, call.args[0])
+        if isinstance(target, ast.Call) and \
+                attr_last(target.func) == "partial" and target.args:
+            target = resolve_name(env, target.args[0])
+        if isinstance(target, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[target.name] = defs.get(target.name, target)
+    return out
+
+
+def _jit_static_names(call: ast.Call) -> Set[str]:
+    names: Set[str] = set()
+    sa = kwarg(call, "static_argnames")
+    if isinstance(sa, (ast.Tuple, ast.List)):
+        names = {e.value for e in sa.elts
+                 if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+    elif isinstance(sa, ast.Constant) and isinstance(sa.value, str):
+        names = {sa.value}
+    return names
+
+
+def _jitted_defs(ctx: FileContext) -> Dict[str, Tuple[ast.FunctionDef,
+                                                      Set[str]]]:
+    """name -> (def, static_argnames) for every jit-wrapped function."""
+    defs = {n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    out: Dict[str, Tuple[ast.FunctionDef, Set[str]]] = {}
+
+    for node in ast.walk(ctx.tree):
+        # decorated defs
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if dotted_name(dec) in ("jax.jit", "jit"):
+                    out[node.name] = (node, set())
+                elif isinstance(dec, ast.Call):
+                    dn = dotted_name(dec.func)
+                    if dn in ("jax.jit", "jit"):
+                        out[node.name] = (node, _jit_static_names(dec))
+                    elif attr_last(dec.func) == "partial" and dec.args \
+                            and dotted_name(dec.args[0]) in ("jax.jit",
+                                                             "jit"):
+                        out[node.name] = (node, _jit_static_names(dec))
+        # jax.jit(fn, ...) call references
+        elif isinstance(node, ast.Call) and \
+                dotted_name(node.func) in ("jax.jit", "jit") and node.args:
+            name = attr_last(node.args[0])
+            if name in defs:
+                out[name] = (defs[name], _jit_static_names(node))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# taint
+# ---------------------------------------------------------------------------
+def _is_program_id(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and \
+        attr_last(node.func) in ("program_id", "num_programs")
+
+
+def _tainted_expr(node: ast.AST, tainted: Set[str]) -> bool:
+    """Does evaluating ``node`` observe a traced value?"""
+    if node is None:
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False  # shape math is host-side and static
+        return _tainted_expr(node.value, tainted)
+    if isinstance(node, ast.Subscript):
+        return _tainted_expr(node.value, tainted) or \
+            _tainted_expr(node.slice, tainted)
+    if _is_program_id(node):
+        return True
+    if isinstance(node, ast.Call):
+        if attr_last(node.func) in _STATIC_CALLS:
+            return False
+        return any(_tainted_expr(a, tainted) for a in node.args) or \
+            any(_tainted_expr(kw.value, tainted) for kw in node.keywords) \
+            or _tainted_expr(node.func, tainted)
+    if isinstance(node, (ast.Constant, ast.Lambda)):
+        return False
+    return any(_tainted_expr(c, tainted) for c in ast.iter_child_nodes(node))
+
+
+def _target_names(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in node.elts:
+            out.extend(_target_names(e))
+        return out
+    if isinstance(node, ast.Starred):
+        return _target_names(node.value)
+    return []
+
+
+def _compute_taint(fn: ast.AST, static: Set[str],
+                   kernel_mode: bool) -> Set[str]:
+    a = fn.args
+    tainted: Set[str] = set()
+    for p in a.posonlyargs + a.args:
+        if p.arg not in ("self", "cls") and p.arg not in static:
+            tainted.add(p.arg)
+    if a.vararg is not None:  # kernels take *refs
+        tainted.add(a.vararg.arg)
+    if kernel_mode:
+        # nested helpers (fori_loop bodies, pl.when closures) receive
+        # traced carries/operands positionally
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                na = node.args
+                tainted.update(p.arg for p in na.posonlyargs + na.args)
+
+    for _ in range(10):
+        before = len(tainted)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if _tainted_expr(node.value, tainted):
+                    for t in node.targets:
+                        tainted.update(_target_names(t))
+            elif isinstance(node, ast.AugAssign):
+                if _tainted_expr(node.value, tainted) or \
+                        _tainted_expr(node.target, tainted):
+                    tainted.update(_target_names(node.target))
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                if _tainted_expr(node.value, tainted):
+                    tainted.update(_target_names(node.target))
+            elif isinstance(node, ast.For):
+                if _tainted_expr(node.iter, tainted):
+                    tainted.update(_target_names(node.target))
+        if len(tainted) == before:
+            break
+    return tainted
+
+
+# ---------------------------------------------------------------------------
+# the check
+# ---------------------------------------------------------------------------
+def _check_fn(ctx: FileContext, fn: ast.AST, static: Set[str],
+              kernel_mode: bool) -> List[Finding]:
+    out: List[Finding] = []
+    symbol = ctx.qualname(fn)
+    tainted = _compute_taint(fn, static, kernel_mode)
+
+    def finding(node: ast.AST, msg: str) -> None:
+        out.append(Finding(rule="tracer-safety", path=ctx.path,
+                           line=node.lineno, col=node.col_offset,
+                           symbol=symbol, message=msg))
+
+    kv_scale_read = False
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            if _tainted_expr(node.test, tainted):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                finding(node, f"Python `{kind}` on a traced value — "
+                              f"use jnp.where / lax.cond / pl.when")
+        elif isinstance(node, ast.Call):
+            name = attr_last(node.func)
+            if name == "item" and isinstance(node.func, ast.Attribute):
+                finding(node, "`.item()` host escape inside a traced "
+                              "function forces a device sync")
+            elif name in ("float", "int", "bool") and \
+                    isinstance(node.func, ast.Name) and node.args and \
+                    _tainted_expr(node.args[0], tainted):
+                finding(node, f"`{name}()` on a traced value is a host "
+                              f"escape — keep it as a jax scalar")
+            elif isinstance(node.func, ast.Attribute) and \
+                    attr_root(node.func) in ("np", "numpy") and \
+                    any(_tainted_expr(arg, tainted) for arg in node.args):
+                finding(node, f"np.{node.func.attr}() on a traced value "
+                              f"escapes the trace — use jnp")
+        if isinstance(node, ast.Name) and node.id == "kv_scale" and \
+                isinstance(node.ctx, ast.Load):
+            kv_scale_read = True
+
+    if kernel_mode:
+        a = fn.args
+        params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        if "kv_scale" in params and not kv_scale_read:
+            finding(fn, "kernel declares `kv_scale` but never applies it "
+                        "— int8 pool reads would stay unscaled")
+    return out
+
+
+@register(
+    "tracer-safety",
+    "no Python control flow / host escapes on traced values in kernels "
+    "and jitted steps; int8 reads apply kv_scale",
+)
+def check(ctx: FileContext, project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    kernels = _kernel_defs(ctx)
+    jitted = _jitted_defs(ctx)
+    for name, fn in kernels.items():
+        out.extend(_check_fn(ctx, fn, set(), kernel_mode=True))
+    for name, (fn, static) in jitted.items():
+        if name in kernels:
+            continue
+        out.extend(_check_fn(ctx, fn, static, kernel_mode=False))
+    return out

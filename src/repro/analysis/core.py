@@ -1,0 +1,384 @@
+"""replint core: findings, rule registry, suppressions, baseline, reporters.
+
+The analysis suite is a set of *project-native* rules — each one encodes a
+cross-layer contract of this serving stack that no generic linter knows
+about (Pallas grid/BlockSpec arity, knob threading, the structured-error
+taxonomy, tracer safety inside kernels, allocator refcount discipline).
+
+Vocabulary:
+
+  * a ``Rule`` is a named check run over one ``FileContext`` with access to
+    the whole ``Project`` (for cross-file passes like the call-graph knob
+    checker);
+  * a ``Finding`` is one violation, keyed line-independently by
+    (rule, path, symbol, message) so baselines survive unrelated edits;
+  * a suppression comment ``# replint: disable=rule[,rule] -- reason`` on
+    (or directly above) the offending line silences it at the source;
+  * a checked-in JSON baseline grandfathers known findings without hiding
+    *new* ones — the driver exits non-zero only on unbaselined findings.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+BASELINE_VERSION = 1
+REPORT_VERSION = 1
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*replint:\s*(disable|disable-file)\s*=\s*"
+    r"([A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)"
+    r"(?:\s*--\s*(?P<reason>.*))?")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    symbol: str  # enclosing qualname, "<module>" at top level
+    message: str
+    suppressed: bool = False
+    baselined: bool = False
+
+    def key(self) -> Tuple[str, str, str, str]:
+        """Line-independent identity — what the baseline matches on."""
+        return (self.rule, self.path, self.symbol, self.message)
+
+    def as_dict(self) -> Dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "symbol": self.symbol,
+                "message": self.message, "suppressed": self.suppressed,
+                "baselined": self.baselined}
+
+
+class FileContext:
+    """One parsed source file plus its suppression table."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.lines = source.splitlines()
+        # line (1-based) -> set of rule names disabled on that line
+        self.line_disables: Dict[int, set] = {}
+        self.file_disables: set = set()
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(2).split(",")}
+            if m.group(1) == "disable-file":
+                self.file_disables |= rules
+            else:
+                self.line_disables.setdefault(i, set()).update(rules)
+        _annotate_parents(self.tree)
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        """A finding is suppressed by a comment on its line, on the line
+        directly above it, or by a file-level ``disable-file``."""
+        if rule in self.file_disables or "all" in self.file_disables:
+            return True
+        for ln in (line, line - 1):
+            disabled = self.line_disables.get(ln, ())
+            if rule in disabled or "all" in disabled:
+                return True
+        return False
+
+    def qualname(self, node: ast.AST) -> str:
+        """Dotted name of the def/class chain enclosing ``node``."""
+        parts: List[str] = []
+        cur = getattr(node, "_replint_parent", None)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            parts.append(node.name)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            cur = getattr(cur, "_replint_parent", None)
+        return ".".join(reversed(parts)) or "<module>"
+
+
+def _annotate_parents(tree: ast.AST) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._replint_parent = parent  # type: ignore[attr-defined]
+
+
+class Project:
+    """The full analyzed file set + lazily built cross-file indexes."""
+
+    def __init__(self, contexts: Sequence[FileContext]):
+        self.contexts = list(contexts)
+        self._signatures: Optional[Dict[str, List["FuncSig"]]] = None
+
+    @property
+    def signatures(self) -> Dict[str, List["FuncSig"]]:
+        """Bare function name -> every def of that name in the project."""
+        if self._signatures is None:
+            index: Dict[str, List[FuncSig]] = {}
+            for ctx in self.contexts:
+                for node in ast.walk(ctx.tree):
+                    if isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        index.setdefault(node.name, []).append(
+                            FuncSig.from_def(node, ctx))
+            self._signatures = index
+        return self._signatures
+
+
+@dataclasses.dataclass
+class FuncSig:
+    """Signature facts the call-graph checkers need."""
+
+    name: str
+    qualname: str
+    path: str
+    positional: Tuple[str, ...]  # posonly + pos-or-kw, in order
+    kwonly: Tuple[str, ...]
+    has_varargs: bool
+    has_kwargs: bool
+
+    @property
+    def params(self) -> set:
+        return set(self.positional) | set(self.kwonly)
+
+    @classmethod
+    def from_def(cls, node, ctx: FileContext) -> "FuncSig":
+        a = node.args
+        pos = tuple(p.arg for p in (a.posonlyargs + a.args))
+        return cls(name=node.name, qualname=ctx.qualname(node),
+                   path=ctx.path, positional=pos,
+                   kwonly=tuple(p.arg for p in a.kwonlyargs),
+                   has_varargs=a.vararg is not None,
+                   has_kwargs=a.kwarg is not None)
+
+
+@dataclasses.dataclass
+class Rule:
+    name: str
+    doc: str
+    check: Callable[[FileContext, Project], List[Finding]]
+    # path-segment filter: the rule runs only on files with one of these
+    # directory names in their path; () = every analyzed file
+    dirs: Tuple[str, ...] = ()
+
+    def applies(self, path: str) -> bool:
+        if not self.dirs:
+            return True
+        parts = Path(path).parts
+        return any(d in parts for d in self.dirs)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(name: str, doc: str, dirs: Tuple[str, ...] = ()):
+    def deco(fn):
+        RULES[name] = Rule(name=name, doc=doc, check=fn, dirs=dirs)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+def call_name(call: ast.Call) -> str:
+    """Bare (last-segment) name of a call target; '' if not a name chain."""
+    return attr_last(call.func)
+
+
+def attr_last(node: ast.AST) -> str:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return ""
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'pl.pallas_call' for Attribute chains, 'name' for Name, else ''."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def attr_root(node: ast.AST) -> str:
+    """Leftmost name of an attribute chain ('np' for np.linalg.norm)."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def kwarg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def scope_env(ctx: FileContext, node: ast.AST) -> Dict[str, ast.AST]:
+    """Name -> assigned value, module scope overridden by each enclosing
+    function scope (innermost wins).  Simple single-assignment resolution:
+    the *last* textual assignment of a name in a scope is what resolves."""
+    scopes: List[ast.AST] = [ctx.tree]
+    chain: List[ast.AST] = []
+    cur = getattr(node, "_replint_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            chain.append(cur)
+        cur = getattr(cur, "_replint_parent", None)
+    scopes.extend(reversed(chain))  # outermost function first
+    env: Dict[str, ast.AST] = {}
+    for scope in scopes:
+        for stmt in ast.iter_child_nodes(scope):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                env[stmt.targets[0].id] = stmt.value
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                env[stmt.name] = stmt
+    return env
+
+
+def resolve_name(env: Dict[str, ast.AST], node: ast.AST) -> ast.AST:
+    depth = 0
+    while isinstance(node, ast.Name) and node.id in env and depth < 8:
+        nxt = env[node.id]
+        if nxt is node:
+            break
+        node = nxt
+        depth += 1
+    return node
+
+
+# ---------------------------------------------------------------------------
+# driving
+# ---------------------------------------------------------------------------
+def collect_files(paths: Sequence[str], root: Path) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        pp = (root / p) if not Path(p).is_absolute() else Path(p)
+        if pp.is_dir():
+            out.extend(sorted(pp.rglob("*.py")))
+        elif pp.suffix == ".py":
+            out.append(pp)
+    return out
+
+
+def analyze_paths(paths: Sequence[str], root: Path,
+                  rules: Optional[Sequence[str]] = None,
+                  files: Optional[Sequence[Path]] = None) -> List[Finding]:
+    """Run the (selected) rules over every .py file under ``paths``.
+
+    Returns all findings with ``suppressed`` marked; baseline marking is
+    the caller's job (it owns the baseline file location).
+    """
+    # import for side effect: registers every built-in checker
+    from repro.analysis import checkers  # noqa: F401
+
+    selected = [RULES[r] for r in rules] if rules else list(RULES.values())
+    file_list = list(files) if files is not None \
+        else collect_files(paths, root)
+
+    contexts: List[FileContext] = []
+    findings: List[Finding] = []
+    for f in file_list:
+        rel = f.relative_to(root).as_posix() if f.is_absolute() and \
+            f.is_relative_to(root) else f.as_posix()
+        try:
+            contexts.append(FileContext(rel, f.read_text()))
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule="parse-error", path=rel, line=e.lineno or 0, col=0,
+                symbol="<module>", message=f"could not parse: {e.msg}"))
+    project = Project(contexts)
+
+    for ctx in contexts:
+        for rule in selected:
+            if not rule.applies(ctx.path):
+                continue
+            for fnd in rule.check(ctx, project):
+                fnd.suppressed = ctx.is_suppressed(fnd.rule, fnd.line)
+                findings.append(fnd)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+def load_baseline(path: Path) -> set:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return {(e["rule"], e["path"], e["symbol"], e["message"])
+            for e in data.get("findings", [])}
+
+
+def apply_baseline(findings: Sequence[Finding], baseline: set) -> None:
+    for f in findings:
+        if f.key() in baseline:
+            f.baselined = True
+
+
+def write_baseline(findings: Sequence[Finding], path: Path) -> None:
+    entries = [{"rule": f.rule, "path": f.path, "symbol": f.symbol,
+                "message": f.message}
+               for f in findings if not f.suppressed]
+    path.write_text(json.dumps(
+        {"version": BASELINE_VERSION, "findings": entries},
+        indent=2, sort_keys=True) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# reporters
+# ---------------------------------------------------------------------------
+def active(findings: Sequence[Finding]) -> List[Finding]:
+    """Findings that gate the build: neither suppressed nor baselined."""
+    return [f for f in findings if not f.suppressed and not f.baselined]
+
+
+def render_text(findings: Sequence[Finding],
+                show_suppressed: bool = False) -> str:
+    out = []
+    for f in findings:
+        if (f.suppressed or f.baselined) and not show_suppressed:
+            continue
+        tag = " (suppressed)" if f.suppressed else \
+            " (baselined)" if f.baselined else ""
+        out.append(f"{f.path}:{f.line}:{f.col}: {f.rule} "
+                   f"[{f.symbol}] {f.message}{tag}")
+    gating = active(findings)
+    n_sup = sum(f.suppressed for f in findings)
+    n_base = sum(f.baselined for f in findings)
+    out.append(f"replint: {len(gating)} finding(s) "
+               f"({n_sup} suppressed, {n_base} baselined)")
+    return "\n".join(out)
+
+
+def render_json(findings: Sequence[Finding],
+                rules: Sequence[str]) -> str:
+    gating = active(findings)
+    payload = {
+        "version": REPORT_VERSION,
+        "tool": "replint",
+        "rules": sorted(rules),
+        "findings": [f.as_dict() for f in findings],
+        "summary": {
+            "total": len(findings),
+            "suppressed": sum(f.suppressed for f in findings),
+            "baselined": sum(f.baselined for f in findings),
+            "gating": len(gating),
+        },
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)

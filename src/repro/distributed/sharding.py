@@ -22,6 +22,8 @@ from typing import Any, Mapping, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.errors import DistributedSetupError
+
 PhysAxes = Union[None, str, Tuple[str, ...]]
 
 
@@ -130,8 +132,9 @@ def axis_size(name: str) -> int:
     fn = getattr(jax.lax, "axis_size", None)
     if fn is not None:
         return fn(name)
-    raise RuntimeError(f"axis_size({name!r}): no active mesh defines it and "
-                       "this jax has no jax.lax.axis_size")
+    raise DistributedSetupError(
+        f"axis_size({name!r}): no active mesh defines it and this jax has "
+        "no jax.lax.axis_size", axis=name)
 
 
 def logical_spec(

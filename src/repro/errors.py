@@ -58,6 +58,27 @@ class InvalidRequest(EngineError, ValueError):
     at ``add_request`` time, before it holds any resources."""
 
 
+class EngineConfigError(EngineError, ValueError):
+    """A build-time configuration is unusable: invalid engine/scheduler
+    knob values, an unknown kernel backend or combine mode, an unknown
+    model family / layer code / activation.  Raised while constructing the
+    stack (never mid-step), before any request holds resources."""
+
+
+class UnsupportedFeature(EngineError, NotImplementedError):
+    """A structurally valid configuration asks for a combination the
+    current implementation does not support yet (e.g. chunked prefill
+    through recurrent layer families).  Distinct from ``EngineConfigError``:
+    the config is legal, the capability is missing — callers can fall back
+    (the engine drops to monolithic prefill paths) instead of erroring."""
+
+
+class DistributedSetupError(EngineError, RuntimeError):
+    """The distributed layer cannot resolve its environment: a named mesh
+    axis is undefined, no mesh context is active where one is required.
+    Raised at trace/setup time by ``repro.distributed``, not mid-collective."""
+
+
 class RequestTooLong(InvalidRequest):
     """prompt + max_new_tokens exceeds the engine's ``max_seq_len`` (also
     raised for forks whose child would outgrow the device block table)."""

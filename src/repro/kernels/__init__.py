@@ -23,6 +23,8 @@ from typing import Optional
 
 import jax
 
+from repro.errors import EngineConfigError
+
 BACKENDS = ("tpu", "gpu")
 
 
@@ -44,8 +46,9 @@ def resolve_backend(backend: Optional[str]) -> str:
     if backend is None or backend == "auto":
         return "gpu" if _on_platform("gpu") else "tpu"
     if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS} or "
-                         f"None/'auto', got {backend!r}")
+        raise EngineConfigError(f"backend must be one of {BACKENDS} or "
+                                f"None/'auto', got {backend!r}",
+                                backend=backend)
     return backend
 
 

@@ -121,6 +121,9 @@ def choose_decode_params(
         vmem_cap = max(1, kv_budget // (2 * 4 * int(page_size)
                                         * max(1, int(head_dim))))
         pages_per_block = min(target, vmem_cap)
+    # first pass derives n_blocks to *choose* num_splits; the second call
+    # below forwards the chosen value
+    # replint: disable=knob-threading -- two-phase knob derivation
     ppb, n_blocks, _, _ = decode_partition(max_pages, pages_per_block)
     if num_splits is None:
         num_splits = min(max(1, n_blocks // min_bps), max_splits)

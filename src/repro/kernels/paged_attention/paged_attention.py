@@ -105,6 +105,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.errors import EngineConfigError
 from repro.kernels import resolve_interpret
 
 NEG_INF = -1e30
@@ -156,8 +157,9 @@ def resolve_combine_mode(mode: Optional[str], num_splits: int) -> str:
     if mode is None or mode == "auto":
         return "pallas" if num_splits > 1 else "jnp"
     if mode not in COMBINE_MODES:
-        raise ValueError(f"combine_mode must be one of {COMBINE_MODES} "
-                         f"or None/'auto', got {mode!r}")
+        raise EngineConfigError(f"combine_mode must be one of "
+                                f"{COMBINE_MODES} or None/'auto', "
+                                f"got {mode!r}", combine_mode=mode)
     return mode
 
 

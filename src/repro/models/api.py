@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig
+from repro.errors import EngineConfigError
 from repro.models.encdec import EncDecModel
 from repro.models.transformer import TransformerModel
 
@@ -26,7 +27,8 @@ def build_model(cfg: ModelConfig):
         return EncDecModel(cfg)
     if cfg.family in ("dense", "moe", "vlm", "rglru", "xlstm"):
         return TransformerModel(cfg)
-    raise ValueError(f"unknown family {cfg.family!r}")
+    raise EngineConfigError(f"unknown family {cfg.family!r}",
+                            family=cfg.family)
 
 
 def input_specs(run: RunConfig, dtype=jnp.float32) -> Dict[str, Any]:

@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import logical_shard
+from repro.errors import EngineConfigError
 from repro.models.spec import ParamSpec
 
 
@@ -95,7 +96,10 @@ def apply_mlp(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     elif cfg.activation == "gelu_ungated":
         h = jax.nn.gelu(x @ p["wu"])
     else:
-        raise ValueError(cfg.activation)
+        raise EngineConfigError(
+            f"unknown MLP activation {cfg.activation!r} "
+            "(known: silu, gelu, relu2, gelu_ungated)",
+            activation=cfg.activation)
     h = logical_shard(h, "batch", *(None,) * (h.ndim - 2), "mlp")
     return h @ p["wd"]
 

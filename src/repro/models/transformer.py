@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.distributed.sharding import logical_shard
+from repro.errors import EngineConfigError, UnsupportedFeature
 from repro.models import attention as attn
 from repro.models import layers, moe, rglru, spec as pspec, ssm
 from repro.models.spec import ParamSpec
@@ -66,7 +67,8 @@ def layer_spec(code: str, cfg: ModelConfig) -> Dict:
     elif code == "S":
         out["rec"] = ssm.slstm_spec(cfg)
     else:
-        raise ValueError(code)
+        raise EngineConfigError(f"unknown layer code {code!r} "
+                                "(known: A W C R M S)", code=code)
     out.update(_ffn_spec(cfg))
     return out
 
@@ -364,9 +366,11 @@ class TransformerModel:
         cfg = self.cfg
         codes = cfg.pattern()
         if any(c in REC_CODES for c in codes):
-            raise NotImplementedError(
+            raise UnsupportedFeature(
                 "chunked prefill does not support recurrent layers "
-                f"(pattern {cfg.layer_pattern!r})")
+                f"(pattern {cfg.layer_pattern!r}): carrying recurrent "
+                "state across chunks is an open ROADMAP item",
+                pattern=cfg.layer_pattern)
         B, C = tokens.shape
         # cross-attention K/V depend only on the image context, and only
         # rows at chunk 0 need them computed — resume rows reuse their

@@ -26,9 +26,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.paging import HostPageManager
 from repro.core.prefix_cache import PrefixCache
-from repro.errors import (EngineError, InternalError, InvalidRequest,
-                          NumericsError, PoolExhausted, RequestTooLong,
-                          SchedulerInvariantError, TransientDeviceError)
+from repro.errors import (EngineConfigError, EngineError, InternalError,
+                          InvalidRequest, NumericsError, PoolExhausted,
+                          RequestTooLong, SchedulerInvariantError,
+                          TransientDeviceError)
 from repro.models.api import build_model
 from repro.serving.faults import FaultPlan, FaultyPageManager
 from repro.serving.request import Request, Status
@@ -101,16 +102,20 @@ class Engine:
         self.prefill_chunk = prefill_chunk
         if prefill_chunk is not None:
             if prefill_chunk < 1:
-                raise ValueError("prefill_chunk must be >= 1 (or None)")
+                raise EngineConfigError(
+                    "prefill_chunk must be >= 1 (or None)",
+                    prefill_chunk=prefill_chunk)
             if not self.paged:
-                raise ValueError("chunked prefill requires the paged "
-                                 "engine (paged=True)")
+                raise EngineConfigError(
+                    "chunked prefill requires the paged engine (paged=True)",
+                    prefill_chunk=prefill_chunk)
             codes = cfg.pattern() if cfg.family != "encdec" else ""
             if any(c in "RMS" for c in codes):
-                raise ValueError(
+                raise EngineConfigError(
                     "chunked prefill does not support recurrent layers "
                     f"(pattern {cfg.layer_pattern!r}): their prefill "
-                    "state replay assumes the whole prompt")
+                    "state replay assumes the whole prompt",
+                    pattern=cfg.layer_pattern)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.rng, init_rng = jax.random.split(rng)
         self.params = (params if params is not None
@@ -142,25 +147,26 @@ class Engine:
             # sharing to be sound, and their content must be a function
             # of the token prefix alone (that is the radix key)
             if not self.paged:
-                raise ValueError("prefix_cache requires the paged engine "
-                                 "(paged=True)")
+                raise EngineConfigError(
+                    "prefix_cache requires the paged engine (paged=True)")
             if window > 0:
-                raise ValueError(
+                raise EngineConfigError(
                     "prefix_cache requires window=0: windowed layers "
                     "overwrite their ring pages in place, so cached "
-                    "pages shared from a live donor would be mutated")
+                    "pages shared from a live donor would be mutated",
+                    window=window)
             if (cfg.family == "encdec"
                     or getattr(self.model, "n_cross_layers", 0)):
-                raise ValueError(
+                raise EngineConfigError(
                     "prefix_cache does not support encoder/cross-"
                     "attention models: self-attention K/V depend on the "
                     "per-request image/audio context, so token-keyed "
-                    "page sharing would be wrong")
+                    "page sharing would be wrong", family=cfg.family)
             if any(c in "RMS" for c in cfg.pattern()):
-                raise ValueError(
+                raise EngineConfigError(
                     "prefix_cache does not support recurrent layers "
                     f"(pattern {cfg.layer_pattern!r}): their state is "
-                    "not page-addressed")
+                    "not page-addressed", pattern=cfg.layer_pattern)
 
         self.faults = faults
         self.numerics_guard = numerics_guard
@@ -902,6 +908,7 @@ class Engine:
         # this unreachable in practice, but the engine must not trust it:
         # a False here with the bumps kept would alias live pages).
         if not self.mgr.fork(src.rid, child.rid):
+            # replint: disable=allocator-discipline -- fork is all-or-nothing: a False return means its internal rollback already ran
             raise PoolExhausted("no pages for fork tail", rid=src.rid,
                                 resource="pages")
         # device: copy the parent's partial tail page into the child's

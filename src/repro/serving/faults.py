@@ -45,7 +45,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
 from repro.core.paging import HostPageManager
-from repro.errors import SchedulerInvariantError
+from repro.errors import EngineConfigError, SchedulerInvariantError
 
 SITES = ("reserve", "extend", "free", "prefill", "decode", "sample",
          "attach")
@@ -95,12 +95,12 @@ class FaultPlan:
     def __init__(self, rules: List[FaultRule], seed: int = 0):
         for r in rules:
             if r.site not in SITES:
-                raise ValueError(f"unknown fault site {r.site!r}; "
-                                 f"sites: {SITES}")
+                raise EngineConfigError(f"unknown fault site {r.site!r}; "
+                                        f"sites: {SITES}", site=r.site)
             if r.kind not in _VALID[r.site]:
-                raise ValueError(
+                raise EngineConfigError(
                     f"fault kind {r.kind!r} invalid at site {r.site!r}; "
-                    f"valid: {_VALID[r.site]}")
+                    f"valid: {_VALID[r.site]}", site=r.site, kind=r.kind)
         self.rules = rules
         self.seed = seed
         self._rng = random.Random(seed)

@@ -35,8 +35,8 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.paging import HostPageManager
-from repro.errors import (Backpressure, DeadlineExceeded, EngineError,
-                          PoolExhausted)
+from repro.errors import (Backpressure, DeadlineExceeded, EngineConfigError,
+                          EngineError, PoolExhausted)
 from repro.serving.request import Request, Status, TERMINAL
 
 # states that occupy a batch slot (and hold pages)
@@ -51,9 +51,12 @@ class Scheduler:
                  admit_watermark: Optional[float] = None,
                  prefix_cache=None):
         if prefill_chunk is not None and prefill_chunk < 1:
-            raise ValueError("prefill_chunk must be >= 1 (or None)")
+            raise EngineConfigError("prefill_chunk must be >= 1 (or None)",
+                                    prefill_chunk=prefill_chunk)
         if admit_watermark is not None and not 0.0 < admit_watermark <= 1.0:
-            raise ValueError("admit_watermark must lie in (0, 1] (or None)")
+            raise EngineConfigError(
+                "admit_watermark must lie in (0, 1] (or None)",
+                admit_watermark=admit_watermark)
         self.mgr = manager
         # global prefix cache (core.prefix_cache.PrefixCache or None):
         # admission attaches new requests to the longest cached prefix,

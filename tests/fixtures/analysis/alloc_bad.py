@@ -1,0 +1,24 @@
+"""Seeded allocator-discipline violations (fixture — parsed, never run)."""
+
+
+class Scheduler:
+    def __init__(self, mgr):
+        self.mgr = mgr
+
+    def sneaky_admit(self, req):
+        # refcount mutated outside the allocator classes
+        self.mgr.refcount[req.first_page] += 1
+        return req
+
+    def sneaky_free(self, req):
+        self.mgr.state.refcount[req.first_page] = 0
+        return req
+
+    def leaky_admit(self, req, prompt):
+        # reserve + attach, then a raise with no rollback path: the
+        # reserved pages leak when the raise fires
+        self.mgr.reserve(req.rid, len(prompt))
+        self.mgr.attach(req.rid, prompt)
+        if req.rid < 0:
+            raise KeyError("bad rid")
+        return req

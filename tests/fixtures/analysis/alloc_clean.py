@@ -1,0 +1,43 @@
+"""Allocator-disciplined callers (fixture — parsed, never executed)."""
+
+
+class HostPageManager:
+    def __init__(self, n):
+        self.refcount = [0] * n
+        self.lens = {}
+
+    def reserve(self, rid, n):
+        # mutation inside the owning class is the sanctioned path
+        self.refcount[0] += 1
+        return True
+
+    def free(self, rid):
+        self.refcount[0] -= 1
+
+    def fork(self, src, dst):
+        for p in range(2):
+            self.refcount[p] += 1
+        if src not in self.lens:
+            # rollback before raise: undo the bumps
+            for p in range(2):
+                self.refcount[p] -= 1
+            raise KeyError(src)  # replint: disable=error-discipline -- fixture
+        return True
+
+
+class Scheduler:
+    def __init__(self, mgr):
+        self.mgr = mgr
+
+    def admit(self, req, prompt):
+        self.mgr.reserve(req.rid, len(prompt))
+        ok = self.mgr.attach(req.rid, prompt)
+        if not ok:
+            # undo call before the raise: disciplined
+            self.mgr.free(req.rid)
+            raise KeyError("attach failed")
+        return req
+
+    def functional_read(self, state, pages):
+        # .at[...] is a functional *read* producing a new array
+        return state.refcount.at[pages].add(1)

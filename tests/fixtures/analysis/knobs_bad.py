@@ -1,0 +1,24 @@
+"""Seeded knob-threading violations (fixture — parsed, never executed)."""
+
+
+def attention(q, kv, backend=None, combine_mode=None, pages_per_block=None):
+    return (q, kv, backend, combine_mode, pages_per_block)
+
+
+def drops_backend(q, kv, backend=None):
+    # accepts `backend` but calls a backend-accepting callee without it
+    return attention(q, kv)
+
+
+def drops_one_of_two(q, kv, backend=None, combine_mode=None):
+    # forwards backend, silently drops combine_mode
+    return attention(q, kv, backend=backend)
+
+
+class Engine:
+    def decode(self, q, kv, pages_per_block=None):
+        # method call: the knob vanishes at the last hop
+        return self._inner(q, kv)
+
+    def _inner(self, q, kv, pages_per_block=None):
+        return attention(q, kv, pages_per_block=pages_per_block)

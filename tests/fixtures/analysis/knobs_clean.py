@@ -1,0 +1,34 @@
+"""Knob-respecting call chains (fixture — parsed, never executed)."""
+
+
+def attention(q, kv, backend=None, combine_mode=None, pages_per_block=None):
+    return (q, kv, backend, combine_mode, pages_per_block)
+
+
+def forwards_kw(q, kv, backend=None, combine_mode=None):
+    return attention(q, kv, backend=backend, combine_mode=combine_mode)
+
+
+def forwards_splat(q, kv, backend=None, **kw):
+    return attention(q, kv, backend=backend, **kw)
+
+
+def forwards_positionally(q, kv, backend=None):
+    return attention(q, kv, backend)
+
+
+def unrelated_callee(q, backend=None):
+    # callee takes no knobs: nothing to forward
+    return helper(q)
+
+
+def helper(q):
+    return q
+
+
+class Engine:
+    def decode(self, q, kv, pages_per_block=None):
+        return self._inner(q, kv, pages_per_block=pages_per_block)
+
+    def _inner(self, q, kv, pages_per_block=None):
+        return attention(q, kv, pages_per_block=pages_per_block)

@@ -1,0 +1,52 @@
+"""Seeded error-discipline violations (fixture — parsed, never executed)."""
+from repro.errors import EngineError, InvalidRequest
+
+
+class LocalOops(Exception):
+    """Not derived from the taxonomy."""
+
+
+def bare_builtin(x):
+    if x < 0:
+        raise ValueError(f"negative: {x}")
+    return x
+
+
+def runtime_builtin():
+    raise RuntimeError("backend exploded")
+
+
+def off_taxonomy():
+    raise LocalOops("not routable by the engine")
+
+
+def missing_rid(rid, n):
+    if n > 8:
+        raise InvalidRequest(f"too many forks: {n}")
+    return n
+
+
+def swallow(xs):
+    total = 0
+    for x in xs:
+        try:
+            total += int(x)
+        except Exception:
+            pass
+    return total
+
+
+def swallow_with_docstring(xs):
+    try:
+        return xs[0]
+    except IndexError:
+        """nothing to see here"""
+
+
+def fine_reraise(rid):
+    try:
+        return 1
+    except EngineError as e:
+        raise  # bare re-raise is fine
+    except ValueError as e:
+        raise e  # re-raising the caught name is fine

@@ -1,0 +1,42 @@
+"""Taxonomy-respecting error handling (fixture — parsed, never executed)."""
+from repro import errors
+from repro.errors import EngineConfigError, EngineError, InvalidRequest
+
+
+class LocalEngineError(EngineError):
+    """In-file subclass of a taxonomy type — counts as structured."""
+
+
+def structured(x):
+    if x < 0:
+        raise EngineConfigError(f"negative: {x}", value=x)
+    return x
+
+
+def structured_with_rid(rid, n):
+    if n > 8:
+        raise InvalidRequest(f"too many forks: {n}", rid=rid)
+    return n
+
+
+def structured_module_alias(seq_id):
+    raise errors.PoolExhausted("dry", rid=seq_id, resource="pages")
+
+
+def structured_local_subclass():
+    raise LocalEngineError("still routable")
+
+
+def handled(xs):
+    try:
+        return xs[0]
+    except IndexError:
+        return None
+
+
+def counted(xs, stats):
+    try:
+        return xs[0]
+    except IndexError:
+        stats["misses"] += 1
+        return None

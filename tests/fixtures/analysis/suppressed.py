@@ -1,0 +1,18 @@
+"""Suppression-comment fixture: every violation here is disabled."""
+
+
+def attention(q, backend=None):
+    return (q, backend)
+
+
+def trailing_comment(q, backend=None):
+    return attention(q)  # replint: disable=knob-threading -- fixture: trailing
+
+def preceding_comment(q, backend=None):
+    # replint: disable=knob-threading -- fixture: preceding line
+    return attention(q)
+
+
+def multi_rule(q, backend=None):
+    # replint: disable=knob-threading,allocator-discipline -- fixture: list
+    return attention(q)

@@ -1,0 +1,45 @@
+"""Seeded tracer-safety violations (fixture — parsed, never executed)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _branchy_kernel(q_ref, lens_ref, o_ref, *, page_size):
+    L = lens_ref[0]
+    if L > page_size:  # Python `if` on a traced value
+        o_ref[...] = q_ref[...]
+    s = float(L)  # host escape on a traced value
+    o_ref[0] = np.tanh(q_ref[0])  # np.* fed a traced value
+    n = q_ref[...].item()  # .item() forces a device sync
+
+
+def run_branchy(q, lens):
+    return pl.pallas_call(
+        functools.partial(_branchy_kernel, page_size=16),
+        grid=(1,),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+    )(q, lens)
+
+
+def _unscaled_int8_kernel(q_ref, k_ref, o_ref, *, kv_scale):
+    # declares kv_scale but never applies it: int8 reads stay unscaled
+    o_ref[...] = q_ref[...] * k_ref[...]
+
+
+def run_unscaled(q, k):
+    return pl.pallas_call(
+        functools.partial(_unscaled_int8_kernel, kv_scale=0.5),
+        grid=(1,),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+    )(q, k)
+
+
+@jax.jit
+def jitted_step(state, tok):
+    pos = state["pos"]
+    while pos > 0:  # Python `while` on a traced value
+        pos = pos - 1
+    return state, tok

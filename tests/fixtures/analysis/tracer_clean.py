@@ -1,0 +1,60 @@
+"""Tracer-safe kernels and steps (fixture — parsed, never executed)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _safe_kernel(q_ref, lens_ref, o_ref, *, page_size, window):
+    # static kw-only params may drive Python control flow
+    if window > 0:
+        page_size = page_size + 0
+    # shape math on a traced ref is host-side and static
+    n_pages = q_ref.shape[0] // page_size
+    L = lens_ref[0]
+    # traced control flow goes through jnp/pl primitives
+    o_ref[...] = jnp.where(L > page_size, q_ref[...], q_ref[...] * 0)
+
+    @pl.when(L > 0)
+    def _tail():
+        o_ref[0] = q_ref[0]
+
+
+def run_safe(q, lens):
+    return pl.pallas_call(
+        functools.partial(_safe_kernel, page_size=16, window=0),
+        grid=(1,),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+    )(q, lens)
+
+
+def _scaled_int8_kernel(q_ref, k_ref, o_ref, *, kv_scale):
+    k = k_ref[...].astype(jnp.float32) * kv_scale
+    o_ref[...] = q_ref[...] * k
+
+
+def run_scaled(q, k):
+    return pl.pallas_call(
+        functools.partial(_scaled_int8_kernel, kv_scale=0.5),
+        grid=(1,),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+    )(q, k)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def jitted_step(state, tok, *, chunk):
+    # static_argnames drive host control flow legally
+    if chunk > 1:
+        tok = tok + 0
+    # np on static shape-derived scalars is host-side planning
+    scale = 1.0 / np.sqrt(state["k"].shape[-1])
+    return state, tok * scale
+
+
+def plain_host_helper(xs):
+    # not jitted, not a kernel: host control flow is fine
+    if xs[0] > 0:
+        return float(xs[0])
+    return 0.0

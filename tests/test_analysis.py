@@ -1,0 +1,317 @@
+"""replint (ISSUE 8): the project-native static-analysis suite.
+
+Covers, per the acceptance contract:
+
+  * every rule fires on its seeded-violation fixture and stays silent on
+    the matching contract-respecting fixture;
+  * suppression comments (trailing, preceding-line, multi-rule lists)
+    silence findings at the source;
+  * the checked-in baseline grandfathers findings by line-independent key
+    (rule, path, symbol, message) — unrelated line shifts don't resurrect
+    them, *new* findings still gate;
+  * the JSON report schema is stable (versioned, fixed key set);
+  * the live tree is clean: ``python -m repro.analysis`` on src/repro
+    exits 0 with the checked-in baseline;
+  * the structured error types this PR introduced keep their double
+    inheritance (old ``except ValueError`` callers stay green) and the
+    converted raise sites emit them.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (RULES, active, analyze_paths, apply_baseline,
+                            load_baseline, render_json, render_text,
+                            write_baseline)
+from repro.analysis.__main__ import main as replint_main
+from repro.errors import (DistributedSetupError, EngineConfigError,
+                          EngineError, UnsupportedFeature)
+
+ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = ROOT / "tests" / "fixtures" / "analysis"
+
+
+def run_on(*names, rules=None):
+    files = [FIXTURES / n for n in names]
+    return analyze_paths([], ROOT, rules=rules, files=files)
+
+
+def gating(findings):
+    return [f for f in findings if not f.suppressed and not f.baselined]
+
+
+# ---------------------------------------------------------------------------
+# rule registry
+# ---------------------------------------------------------------------------
+def test_all_five_rules_registered():
+    assert set(RULES) >= {"pallas-contract", "knob-threading",
+                          "error-discipline", "tracer-safety",
+                          "allocator-discipline"}
+    for rule in RULES.values():
+        assert rule.doc  # --list-rules has something to print
+
+
+# ---------------------------------------------------------------------------
+# pallas-contract
+# ---------------------------------------------------------------------------
+def test_pallas_contract_fires_on_seeded_violations():
+    msgs = [f.message for f in run_on("kernels/pallas_bad.py")]
+    assert any("dimension_semantics has 3" in m for m in msgs)
+    assert sum("index_map takes" in m for m in msgs) >= 3
+    assert any("exactly three (m, l, acc)" in m for m in msgs)
+    assert any("must be f32" in m for m in msgs)
+
+
+def test_pallas_contract_clean_on_contract_respecting_idioms():
+    # factory lambdas, partial-bound maps, vararg prefetch packs,
+    # list-concatenated in_specs: none may false-positive
+    assert run_on("kernels/pallas_clean.py") == []
+
+
+def test_pallas_contract_scoped_to_kernels_dirs():
+    # the same violations outside a kernels/ dir are out of scope
+    assert RULES["pallas-contract"].applies("src/repro/kernels/x.py")
+    assert not RULES["pallas-contract"].applies("src/repro/serving/x.py")
+
+
+# ---------------------------------------------------------------------------
+# knob-threading
+# ---------------------------------------------------------------------------
+def test_knob_threading_fires_on_dropped_knobs():
+    findings = run_on("knobs_bad.py")
+    by_symbol = {f.symbol: f.message for f in findings}
+    assert "'drops_backend' accepts knob 'backend'" in \
+        by_symbol["drops_backend"]
+    assert "combine_mode" in by_symbol["drops_one_of_two"]
+    assert "pages_per_block" in by_symbol["Engine.decode"]
+    assert len(findings) == 3
+
+
+def test_knob_threading_accepts_kw_splat_and_positional_forwarding():
+    assert run_on("knobs_clean.py") == []
+
+
+# ---------------------------------------------------------------------------
+# error-discipline
+# ---------------------------------------------------------------------------
+def test_error_discipline_fires_on_seeded_violations():
+    msgs = [f.message for f in run_on("serving/errors_bad.py")]
+    assert any("bare `raise ValueError`" in m for m in msgs)
+    assert any("bare `raise RuntimeError`" in m for m in msgs)
+    assert any("LocalOops" in m for m in msgs)
+    assert any("does not pass rid=" in m for m in msgs)
+    assert sum("silent except-swallow" in m for m in msgs) == 2
+
+
+def test_error_discipline_accepts_taxonomy_and_subclasses():
+    # direct imports, module-alias raises, in-file EngineError subclasses,
+    # rid-carrying raises, and handlers that actually handle
+    assert run_on("serving/errors_clean.py") == []
+
+
+def test_error_discipline_scoped_to_engine_layers():
+    rule = RULES["error-discipline"]
+    assert rule.applies("src/repro/serving/engine.py")
+    assert rule.applies("src/repro/core/paging.py")
+    assert not rule.applies("src/repro/training/loop.py")
+
+
+# ---------------------------------------------------------------------------
+# tracer-safety
+# ---------------------------------------------------------------------------
+def test_tracer_safety_fires_on_host_escapes():
+    msgs = [f.message for f in run_on("tracer_bad.py")]
+    assert any("Python `if` on a traced value" in m for m in msgs)
+    assert any("Python `while` on a traced value" in m for m in msgs)
+    assert any("`float()` on a traced value" in m for m in msgs)
+    assert any("np.tanh() on a traced value" in m for m in msgs)
+    assert any("`.item()` host escape" in m for m in msgs)
+    assert any("never applies it" in m for m in msgs)  # unused kv_scale
+
+
+def test_tracer_safety_clean_on_static_control_flow():
+    # kw-only kernel params, static_argnames, .shape math, np on static
+    # scalars, pl.when/jnp.where, and plain host helpers: all legal
+    assert run_on("tracer_clean.py") == []
+
+
+# ---------------------------------------------------------------------------
+# allocator-discipline
+# ---------------------------------------------------------------------------
+def test_allocator_discipline_fires_on_outside_mutation_and_leaks():
+    findings = run_on("alloc_bad.py")
+    msgs = [f.message for f in findings]
+    assert sum("refcount mutated outside" in m for m in msgs) == 2
+    assert any("no rollback path" in m for m in msgs)
+
+
+def test_allocator_discipline_accepts_owned_mutations_and_rollbacks():
+    assert run_on("alloc_clean.py") == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+def test_suppression_comments_silence_findings():
+    findings = run_on("suppressed.py")
+    assert len(findings) == 3  # still *reported* as suppressed...
+    assert all(f.suppressed for f in findings)
+    assert gating(findings) == []  # ...but none gate
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+def test_baseline_grandfathers_by_line_independent_key(tmp_path):
+    findings = run_on("knobs_bad.py")
+    assert findings
+    bl = tmp_path / "baseline.json"
+    write_baseline(findings, bl)
+
+    again = run_on("knobs_bad.py")
+    for f in again:
+        f.line += 40  # simulate unrelated edits shifting every line
+    apply_baseline(again, load_baseline(bl))
+    assert all(f.baselined for f in again)
+    assert gating(again) == []
+
+    # a NEW finding (different message/symbol) still gates
+    fresh = run_on("alloc_bad.py")
+    apply_baseline(fresh, load_baseline(bl))
+    assert gating(fresh)
+
+
+def test_baseline_file_format_is_versioned(tmp_path):
+    bl = tmp_path / "baseline.json"
+    write_baseline(run_on("knobs_bad.py"), bl)
+    data = json.loads(bl.read_text())
+    assert data["version"] == 1
+    assert {"rule", "path", "symbol", "message"} == set(
+        data["findings"][0])
+
+
+# ---------------------------------------------------------------------------
+# reporters
+# ---------------------------------------------------------------------------
+def test_json_report_schema_is_stable():
+    findings = run_on("alloc_bad.py", "suppressed.py")
+    payload = json.loads(render_json(findings, sorted(RULES)))
+    assert set(payload) == {"version", "tool", "rules", "findings",
+                            "summary"}
+    assert payload["version"] == 1
+    assert payload["tool"] == "replint"
+    assert set(payload["summary"]) == {"total", "suppressed", "baselined",
+                                       "gating"}
+    assert payload["summary"]["gating"] == 3
+    assert payload["summary"]["suppressed"] == 3
+    for f in payload["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "symbol",
+                          "message", "suppressed", "baselined"}
+
+
+def test_text_report_counts_and_locations():
+    findings = run_on("knobs_bad.py")
+    text = render_text(findings)
+    assert "knobs_bad.py:10:" in text
+    assert "replint: 3 finding(s)" in text
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def test_driver_list_rules(capsys):
+    assert replint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for name in RULES:
+        assert name in out
+
+
+def test_driver_unknown_rule_is_usage_error(capsys):
+    assert replint_main(["--rules", "no-such-rule"]) == 2
+
+
+def test_driver_exit_codes_on_fixture(capsys, monkeypatch):
+    monkeypatch.chdir(ROOT)
+    bad = str(FIXTURES / "knobs_bad.py")
+    assert replint_main([bad, "--baseline", ""]) == 1
+    clean = str(FIXTURES / "knobs_clean.py")
+    assert replint_main([clean, "--baseline", ""]) == 0
+
+
+def test_driver_rule_selection(capsys, monkeypatch):
+    monkeypatch.chdir(ROOT)
+    bad = str(FIXTURES / "alloc_bad.py")
+    # selecting an unrelated rule sees no findings in this fixture
+    assert replint_main([bad, "--rules", "pallas-contract",
+                         "--baseline", ""]) == 0
+    assert replint_main([bad, "--rules", "allocator-discipline",
+                         "--baseline", ""]) == 1
+
+
+# ---------------------------------------------------------------------------
+# the live tree is clean (the `make lint` gate, in-process)
+# ---------------------------------------------------------------------------
+def test_live_tree_is_clean_under_checked_in_baseline(capsys, monkeypatch):
+    monkeypatch.chdir(ROOT)
+    assert replint_main(["src/repro"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# regression: the structured errors this PR introduced at real raise sites
+# ---------------------------------------------------------------------------
+def test_config_errors_keep_valueerror_compatibility():
+    # double inheritance: new structured types remain catchable by the
+    # builtin supertypes pre-existing callers except on
+    assert issubclass(EngineConfigError, ValueError)
+    assert issubclass(EngineConfigError, EngineError)
+    assert issubclass(UnsupportedFeature, NotImplementedError)
+    assert issubclass(UnsupportedFeature, EngineError)
+    assert issubclass(DistributedSetupError, RuntimeError)
+    assert issubclass(DistributedSetupError, EngineError)
+
+
+def test_unknown_backend_is_structured():
+    from repro.kernels import resolve_backend
+    with pytest.raises(EngineConfigError, match="backend must be one of"):
+        resolve_backend("cuda-graphs")
+    try:
+        resolve_backend("cuda-graphs")
+    except EngineConfigError as e:
+        assert e.context["backend"] == "cuda-graphs"
+
+
+def test_unknown_combine_mode_is_structured():
+    from repro.kernels.paged_attention.paged_attention import \
+        resolve_combine_mode
+    with pytest.raises(EngineConfigError, match="combine_mode"):
+        resolve_combine_mode("fused", 2)
+
+
+def test_unknown_family_is_structured():
+    import dataclasses
+
+    from repro.configs import get_smoke
+    from repro.models.api import build_model
+    cfg = dataclasses.replace(get_smoke("llama2-7b"), family="mamba")
+    with pytest.raises(EngineConfigError, match="unknown family"):
+        build_model(cfg)
+
+
+def test_recurrent_chunked_prefill_is_structured():
+    from repro.configs import get_smoke
+    from repro.serving.engine import Engine
+    cfg = get_smoke("recurrentgemma-9b")
+    with pytest.raises(EngineConfigError, match="recurrent"):
+        Engine(cfg, max_slots=2, max_seq_len=64, prefill_chunk=8)
+
+
+def test_fault_plan_errors_are_structured():
+    from repro.serving.faults import FaultPlan, FaultRule
+    with pytest.raises(EngineConfigError, match="unknown fault site"):
+        FaultPlan([FaultRule(site="warp", kind="nan")])
+    try:
+        FaultPlan([FaultRule(site="warp", kind="nan")])
+    except EngineConfigError as e:
+        assert e.context["site"] == "warp"
