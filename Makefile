@@ -36,8 +36,13 @@
 #               discipline.  Fails on any finding that is neither
 #               suppressed in source nor in replint_baseline.json.
 #   lint-changed
-#               the same rules scoped to .py files changed vs git —
-#               the fast pre-push loop
+#               the same rules scoped to .py files changed vs git (dirty
+#               worktree + commits since the merge-base with origin/main)
+#               — the fast pre-commit/pre-push loop
+#   install-hooks
+#               point git at the committed .githooks/ directory so every
+#               commit runs `make lint-changed` first (bypass one commit
+#               with `git commit --no-verify`)
 #   verify      lint + test-clean + test-gpu-interpret + test-faults +
 #               test-prefix + bench-fast
 
@@ -52,7 +57,7 @@ KNOWN_FAIL =
 GPU_GATE_SUITES = tests/test_kernels_paged.py tests/test_combine_conformance.py
 
 .PHONY: test test-clean test-gpu-interpret test-chunked test-faults \
-        test-prefix bench-fast lint lint-changed verify
+        test-prefix bench-fast lint lint-changed install-hooks verify
 
 test:
 	$(PY) -m pytest -x -q
@@ -92,5 +97,9 @@ lint:
 
 lint-changed:
 	$(PY) -m repro.analysis --changed-only
+
+install-hooks:
+	git config core.hooksPath .githooks
+	@echo "pre-commit hook installed (runs 'make lint-changed')"
 
 verify: lint test-clean test-gpu-interpret test-faults test-prefix bench-fast

@@ -12,7 +12,8 @@ import sys
 from pathlib import Path
 
 from repro.analysis.core import (RULES, active, analyze_paths, apply_baseline,
-                                 load_baseline, render_json, render_text,
+                                 load_baseline, render_json, render_sarif,
+                                 render_text, stale_baseline_entries,
                                  write_baseline)
 
 DEFAULT_PATHS = ("src/repro",)
@@ -28,8 +29,32 @@ def _repo_root() -> Path:
     return cur
 
 
+def _merge_base_files(root: Path) -> list:
+    """Paths committed since the merge-base with ``origin/main``.
+
+    A branch with clean worktree but N local commits still differs from
+    what CI will see on main — ``--changed-only`` must cover those files
+    too, not just the dirty ones.  Silently empty when origin/main is
+    absent (fresh clone, detached CI checkout): the dirty-worktree set
+    is then the whole answer.
+    """
+    try:
+        base = subprocess.run(
+            ["git", "merge-base", "origin/main", "HEAD"], cwd=root,
+            capture_output=True, text=True, check=True).stdout.strip()
+        out = subprocess.run(
+            ["git", "diff", "--name-only", "--diff-filter=d", base,
+             "HEAD"], cwd=root,
+            capture_output=True, text=True, check=True).stdout
+    except (OSError, subprocess.CalledProcessError):
+        return []
+    return [line.strip() for line in out.splitlines() if line.strip()]
+
+
 def _changed_files(root: Path) -> list:
-    """Tracked-but-modified + staged + untracked .py files vs git.
+    """Changed .py files vs git: the dirty worktree (tracked-but-modified
+    + staged + untracked) unioned with commits since the merge-base with
+    ``origin/main``.
 
     Seeded-violation fixtures (tests/fixtures/) are excluded: they are
     *supposed* to light the rules up and are gated by tests, not lint.
@@ -41,14 +66,17 @@ def _changed_files(root: Path) -> list:
     except (OSError, subprocess.CalledProcessError) as e:
         print(f"replint: --changed-only needs git ({e})", file=sys.stderr)
         return []
-    files = []
+    paths = []
     for line in out.splitlines():
         if len(line) < 4:
             continue
         path = line[3:].strip()
         if " -> " in path:  # rename: take the new side
             path = path.split(" -> ", 1)[1]
-        path = path.strip('"')
+        paths.append(path.strip('"'))
+    paths.extend(_merge_base_files(root))
+    files = []
+    for path in dict.fromkeys(paths):  # de-dupe, keep order
         if not path.endswith(".py") or not (root / path).exists():
             continue
         if "fixtures" in Path(path).parts:
@@ -74,6 +102,9 @@ def main(argv=None) -> int:
                         help="print the registered rules and exit")
     parser.add_argument("--json", action="store_true",
                         help="emit the machine-readable JSON report")
+    parser.add_argument("--sarif", action="store_true",
+                        help="emit a SARIF 2.1.0 report (for GitHub code "
+                             "scanning / IDE problem panes)")
     parser.add_argument("--baseline", default=DEFAULT_BASELINE,
                         help="baseline file (default: %(default)s; "
                              "'' disables)")
@@ -87,6 +118,11 @@ def main(argv=None) -> int:
                         help="include suppressed/baselined findings in the "
                              "text report")
     args = parser.parse_args(argv)
+
+    if args.json and args.sarif:
+        print("replint: --json and --sarif are mutually exclusive",
+              file=sys.stderr)
+        return 2
 
     if args.list_rules:
         width = max(len(r) for r in RULES) if RULES else 0
@@ -124,10 +160,29 @@ def main(argv=None) -> int:
         print(f"replint: wrote {n} finding(s) to {baseline_path}")
         return 0
     if baseline_path is not None:
-        apply_baseline(findings, load_baseline(baseline_path))
+        baseline = load_baseline(baseline_path)
+        apply_baseline(findings, baseline)
+        if files is None:
+            # full run over args.paths: every entry under those roots is
+            # in scope (paths with zero current findings included)
+            roots = [p.rstrip("/") for p in args.paths]
+            analyzed = sorted(
+                key[1] for key in baseline
+                if any(key[1] == r or key[1].startswith(r + "/")
+                       for r in roots))
+        else:
+            analyzed = sorted(str(p.resolve().relative_to(root))
+                              for p in files)
+        stale = stale_baseline_entries(findings, baseline, analyzed)
+        for key in stale:
+            print(f"replint: stale baseline entry {list(key)} — the "
+                  f"finding no longer fires; delete it from "
+                  f"{baseline_path.name}", file=sys.stderr)
 
     if args.json:
         print(render_json(findings, rules or sorted(RULES)))
+    elif args.sarif:
+        print(render_sarif(findings, rules or sorted(RULES)))
     else:
         print(render_text(findings, show_suppressed=args.show_suppressed))
     return 1 if active(findings) else 0

@@ -6,6 +6,7 @@ time).  ``analyze_paths`` imports it before selecting rules, so rules are
 always available to the driver and to tests.
 """
 
+from repro.analysis import shapes, statemachine  # noqa: F401
 from repro.analysis.checkers import (allocator_discipline,  # noqa: F401
                                      error_discipline, knob_threading,
                                      pallas_contract, tracer_safety)
@@ -15,5 +16,7 @@ __all__ = [
     "error_discipline",
     "knob_threading",
     "pallas_contract",
+    "shapes",
+    "statemachine",
     "tracer_safety",
 ]

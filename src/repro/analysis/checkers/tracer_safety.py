@@ -41,6 +41,10 @@ from repro.analysis.core import (FileContext, Finding, Project, attr_last,
 
 _STATIC_ATTRS = {"shape", "ndim", "dtype"}
 _STATIC_CALLS = {"len", "range", "isinstance", "getattr", "hasattr", "type"}
+# structured-control-flow primitives whose carries are always traced:
+# the loop body's parameters and the loop's result are traced values
+# even when the init operand is a Python constant
+_LOOP_CALLS = {"fori_loop", "scan", "while_loop"}
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +135,8 @@ def _tainted_expr(node: ast.AST, tainted: Set[str]) -> bool:
     if _is_program_id(node):
         return True
     if isinstance(node, ast.Call):
+        if attr_last(node.func) in _LOOP_CALLS:
+            return True  # the carry is traced even from a constant init
         if attr_last(node.func) in _STATIC_CALLS:
             return False
         return any(_tainted_expr(a, tainted) for a in node.args) or \
@@ -171,6 +177,31 @@ def _compute_taint(fn: ast.AST, static: Set[str],
                     and node is not fn:
                 na = node.args
                 tainted.update(p.arg for p in na.posonlyargs + na.args)
+
+    # lax.fori_loop/scan/while_loop body closures receive traced
+    # carries/operands positionally in *any* traced function — taint the
+    # parameters of every function operand of a loop call, resolved
+    # through local defs, lambdas and functools.partial
+    local_defs = {n.name: n for n in ast.walk(fn)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                  and n is not fn}
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Call)
+                and attr_last(node.func) in _LOOP_CALLS):
+            continue
+        operands = list(node.args) + [kw.value for kw in node.keywords]
+        for arg in operands:
+            if isinstance(arg, ast.Call) and \
+                    attr_last(arg.func) == "partial" and arg.args:
+                arg = arg.args[0]
+            target: Optional[ast.AST] = None
+            if isinstance(arg, ast.Lambda):
+                target = arg
+            elif isinstance(arg, ast.Name) and arg.id in local_defs:
+                target = local_defs[arg.id]
+            if target is not None:
+                ta = target.args
+                tainted.update(p.arg for p in ta.posonlyargs + ta.args)
 
     for _ in range(10):
         before = len(tainted)

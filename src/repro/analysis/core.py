@@ -340,6 +340,21 @@ def write_baseline(findings: Sequence[Finding], path: Path) -> None:
         indent=2, sort_keys=True) + "\n")
 
 
+def stale_baseline_entries(findings: Sequence[Finding], baseline: set,
+                           analyzed_paths: Optional[Sequence[str]] = None,
+                           ) -> List[Tuple]:
+    """Baseline entries whose finding no longer fires — the defect was
+    fixed, so the grandfathering should be deleted before it masks a
+    regression.  ``analyzed_paths=None`` means a full run (every entry
+    is in scope); a ``--changed-only`` run passes the analyzed subset so
+    entries for unanalyzed files are not falsely flagged as stale."""
+    analyzed = None if analyzed_paths is None else set(analyzed_paths)
+    current = {f.key() for f in findings}
+    return sorted(key for key in baseline
+                  if (analyzed is None or key[1] in analyzed)
+                  and key not in current)
+
+
 # ---------------------------------------------------------------------------
 # reporters
 # ---------------------------------------------------------------------------
@@ -364,6 +379,58 @@ def render_text(findings: Sequence[Finding],
     out.append(f"replint: {len(gating)} finding(s) "
                f"({n_sup} suppressed, {n_base} baselined)")
     return "\n".join(out)
+
+
+def render_sarif(findings: Sequence[Finding],
+                 rules: Sequence[str]) -> str:
+    """SARIF 2.1.0 report — the interchange format GitHub code scanning
+    and most IDE problem panes ingest.  Suppressed/baselined findings
+    are carried with a ``suppressions`` entry instead of being dropped,
+    so the dashboard mirrors the gating semantics."""
+    rule_objs = [{
+        "id": name,
+        "shortDescription": {"text": RULES[name].doc if name in RULES
+                             else name},
+    } for name in sorted(set(rules) | {f.rule for f in findings})]
+    rule_index = {r["id"]: i for i, r in enumerate(rule_objs)}
+    results = []
+    for f in findings:
+        res = {
+            "ruleId": f.rule,
+            "ruleIndex": rule_index[f.rule],
+            "level": "error",
+            "message": {"text": f"[{f.symbol}] {f.message}"},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {"uri": f.path,
+                                         "uriBaseId": "SRCROOT"},
+                    "region": {"startLine": max(1, f.line),
+                               "startColumn": f.col + 1},
+                },
+            }],
+        }
+        if f.suppressed or f.baselined:
+            res["suppressions"] = [{
+                "kind": "inSource" if f.suppressed else "external",
+                "justification": "replint suppression comment"
+                if f.suppressed else "replint baseline",
+            }]
+        results.append(res)
+    payload = {
+        "$schema": ("https://raw.githubusercontent.com/oasis-tcs/"
+                    "sarif-spec/master/Schemata/sarif-schema-2.1.0.json"),
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "replint",
+                "informationUri": "https://example.invalid/replint",
+                "rules": rule_objs,
+            }},
+            "originalUriBaseIds": {"SRCROOT": {"uri": "file:///"}},
+            "results": results,
+        }],
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)
 
 
 def render_json(findings: Sequence[Finding],

@@ -302,6 +302,21 @@ class HostPageManager:
                 return False
         return True
 
+    def clone(self) -> "HostPageManager":
+        """Structural copy for speculative exploration (the replint model
+        checker branches the allocator at every transition).  The cache
+        hook is *not* carried over — ``PrefixCache.clone`` re-wires it so
+        a clone never mutates the original's trie."""
+        new = HostPageManager.__new__(HostPageManager)
+        new.page_size = self.page_size
+        new.num_pages = self.num_pages
+        new.free_list = list(self.free_list)
+        new.refcount = list(self.refcount)
+        new.tables = {rid: list(row) for rid, row in self.tables.items()}
+        new.lens = dict(self.lens)
+        new.cache = None
+        return new
+
     # -- accounting (paper's <5% overhead metric) -------------------------
     @property
     def used_pages(self) -> int:

@@ -277,6 +277,37 @@ class PrefixCache:
         stay.  Returns pages freed."""
         return self.reclaim(len(self._page_node))
 
+    def clone(self, manager) -> "PrefixCache":
+        """Structural copy wired into ``manager`` (a cloned host mirror —
+        see ``HostPageManager.clone``).  Trie topology, residency index,
+        LRU clocks and counters are all copied; the clone registers
+        itself as ``manager.cache`` and never touches the original."""
+        new = PrefixCache.__new__(PrefixCache)
+        new.mgr = manager
+        new.faults = self.faults
+        new.root = _Node((), -1, None, 0)
+        new._page_node = {}
+        new._clock = self._clock
+        new._seq = self._seq
+        new.hits = self.hits
+        new.misses = self.misses
+        new.hit_tokens = self.hit_tokens
+        new.inserted_pages = self.inserted_pages
+        new.evicted_pages = self.evicted_pages
+        new.attach_faults = self.attach_faults
+
+        def copy_children(src: _Node, dst: _Node) -> None:
+            for chunk, child in src.children.items():
+                c = _Node(chunk, child.page, dst, child.seq)
+                c.last_use = child.last_use
+                dst.children[chunk] = c
+                new._page_node[child.page] = c
+                copy_children(child, c)
+
+        copy_children(self.root, new.root)
+        manager.cache = new
+        return new
+
     # -- reporting ------------------------------------------------------
     def stats(self) -> Dict[str, int]:
         return {

@@ -107,6 +107,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.errors import EngineConfigError
 from repro.kernels import resolve_interpret
+# the pure-int partition law lives with the declared launch contracts
+# (stdlib-only module) so replint's shape interpreter can load it by path;
+# re-exported here — every caller keeps importing it from this module
+from repro.kernels.paged_attention.contracts import decode_partition  # noqa: F401
 
 NEG_INF = -1e30
 
@@ -123,25 +127,6 @@ COMBINE_DIM_SEMANTICS = ("parallel", "parallel")
 # scratch and stays sequential.
 PREFILL_DIM_SEMANTICS = ("parallel", "parallel", "parallel", "parallel",
                          "arbitrary")
-
-
-def decode_partition(max_pages: int, pages_per_block: int = 1,
-                     num_splits: int = 1) -> Tuple[int, int, int, int]:
-    """Clamp knobs and derive the kernel's split/block partition.
-
-    Returns ``(pages_per_block, n_blocks, num_splits, blocks_per_split)``.
-    Single source of the partition law — the kernel grid, the auto-tuner
-    (`ops.choose_decode_params`), the grid-step accounting
-    (`decode_grid_steps`), and the split-K oracle
-    (`ref.paged_attention_partials_ref`) must all agree bit-for-bit on
-    which pages land in which split.
-    """
-    max_pages = max(1, int(max_pages))
-    ppb = max(1, min(int(pages_per_block), max_pages))
-    n_blocks = -(-max_pages // ppb)
-    ns = max(1, min(int(num_splits), n_blocks))
-    bps = -(-n_blocks // ns)  # last split may cover padding blocks
-    return ppb, n_blocks, ns, bps
 
 
 COMBINE_MODES = ("jnp", "pallas")

@@ -1,0 +1,171 @@
+"""Seeded shape-contract violations (fixture — parsed, never executed).
+
+One site per defect class the ``shapes`` abstract interpreter must catch:
+rank mismatch, non-divisible block shape, out-of-range index_map, wrong
+partial dtype, TPU/GPU partial-contract skew, plus a contractless site.
+Contracts are declared inline (``REPLINT_KERNEL_CONTRACTS``) so the
+fixture is self-contained.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+REPLINT_KERNEL_CONTRACTS = {
+    "bad_rank": {
+        "grid": ("S",),
+        "operands": [
+            {"name": "pool", "shape": ("P", "page_size", "H", "D"),
+             "dtype": "float32"},
+        ],
+        "outputs": [{"shape": ("P", "page_size", "H", "D"),
+                     "dtype": "float32"}],
+        "samples": [{"S": 2, "P": 4, "page_size": 4, "H": 2, "D": 8}],
+    },
+    "bad_divisibility": {
+        "grid": ("S",),
+        "operands": [
+            {"name": "pool", "shape": ("P", "page_size", "H", "D"),
+             "dtype": "float32"},
+        ],
+        "outputs": [{"shape": ("P", "page_size", "H", "D"),
+                     "dtype": "float32"}],
+        "samples": [{"S": 2, "P": 4, "page_size": 4, "H": 2, "D": 8}],
+    },
+    "bad_index_range": {
+        "grid": ("B", "S"),
+        "num_scalar_prefetch": 1,
+        "operands": [
+            {"name": "tables", "shape": ("B", "S"), "dtype": "int32",
+             "value_range": (0, "NPm1")},
+            {"name": "pool", "shape": ("P", "page_size"),
+             "dtype": "float32"},
+        ],
+        "outputs": [{"shape": ("B", "page_size"), "dtype": "float32"}],
+        "samples": [{"B": 2, "S": 2, "P": 4, "page_size": 4, "NPm1": 3}],
+    },
+    "bad_partial_dtype": {
+        "grid": ("B",),
+        "operands": [
+            {"name": "q", "shape": ("B", "G"), "dtype": "float32"},
+        ],
+        "outputs": [
+            {"shape": ("B", "G"), "dtype": "float32"},   # m
+            {"shape": ("B", "G"), "dtype": "float32"},   # l
+        ],
+        "partial_group": "fixture-partials",
+        "samples": [{"B": 2, "G": 4, "_parity": True}],
+    },
+    # TPU/GPU skew: same partial group, but the "gpu" twin *declares* a
+    # transposed acc — the declarations disagree under the parity sample.
+    "skew_tpu": {
+        "grid": ("B",),
+        "operands": [{"name": "q", "shape": ("B", "G", "D"),
+                      "dtype": "float32"}],
+        "outputs": [{"shape": ("B", "G", "D"), "dtype": "float32"}],
+        "partial_group": "skewed-partials",
+        "samples": [{"B": 2, "G": 4, "D": 8, "_parity": True}],
+    },
+    "skew_gpu": {
+        "grid": ("B",),
+        "operands": [{"name": "q", "shape": ("B", "D", "G"),
+                      "dtype": "float32"}],
+        "outputs": [{"shape": ("B", "D", "G"), "dtype": "float32"}],
+        "partial_group": "skewed-partials",
+        "samples": [{"B": 2, "G": 4, "D": 8, "_parity": True}],
+    },
+}
+
+REPLINT_PARTIAL_GROUPS = {
+    "fixture-partials": {},
+    "skewed-partials": {},
+}
+
+
+def _kernel(*refs):
+    refs[-1][...] = refs[0][...]
+
+
+def bad_rank(pool, S):
+    # block shape is rank 3 against the rank-4 pool array
+    return pl.pallas_call(
+        _kernel,
+        grid=(S,),
+        in_specs=[pl.BlockSpec((1, 4, 2), lambda s: (s, 0, 0))],
+        out_specs=pl.BlockSpec((1, 4, 2, 8), lambda s: (s, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, jnp.float32),
+    )(pool)
+
+
+def bad_divisibility(pool, S):
+    # block dim 3 does not divide the page_size=4 axis
+    return pl.pallas_call(
+        _kernel,
+        grid=(S,),
+        in_specs=[pl.BlockSpec((1, 3, 1, 8), lambda s: (s, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 4, 2, 8), lambda s: (s, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, jnp.float32),
+    )(pool)
+
+
+def bad_index_range(tables, pool, B, S):
+    # the +1 pushes the table-driven page index past the pool extent
+    def kv_map(b, s, tables):
+        return (tables[b, s] + 1, 0)
+
+    def out_map(b, s, tables):
+        return (b, 0)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pl.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, S),
+            in_specs=[pl.BlockSpec((1, 4), kv_map)],
+            out_specs=pl.BlockSpec((1, 4), out_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, 4), jnp.float32),
+    )(tables, pool)
+
+
+def bad_partial_dtype(q, B, G):
+    # split-K running max must stay f32; bf16 loses the carry
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, G), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((1, G), lambda b: (b, 0)),
+                   pl.BlockSpec((1, G), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, G), jnp.bfloat16),
+                   jax.ShapeDtypeStruct((B, G), jnp.float32)],
+    )(q)
+
+
+def skew_tpu(q, B, G, D):
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, G, D), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, G, D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, G, D), jnp.float32),
+    )(q)
+
+
+def skew_gpu(q, B, G, D):
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, D, G), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, D, G), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D, G), jnp.float32),
+    )(q)
+
+
+def no_contract(q, B):
+    # a site the inline table forgot: itself a finding
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1,), lambda b: (b,))],
+        out_specs=pl.BlockSpec((1,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+    )(q)

@@ -1,0 +1,115 @@
+"""Clean shape-contract sites (fixture — parsed, never executed).
+
+Exercises the idioms the live kernels use — spec-factory lambdas, list
+comprehensions over ``range(ppb)``, ``functools.partial``-bound
+index_maps, scalar-prefetch tables — all agreeing with their inline
+contracts. The ``shapes`` rule must report nothing here.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+REPLINT_KERNEL_CONTRACTS = {
+    "clean_gather": {
+        "grid": ("B", "S", "bps"),
+        "num_scalar_prefetch": 2,
+        "operands": [
+            {"name": "tables", "shape": ("B", "NB", "ppb"),
+             "dtype": "int32", "value_range": (0, "NPm1")},
+            {"name": "lens", "shape": ("B",), "dtype": "int32"},
+            {"name": "q", "shape": ("B", "G", "D"), "dtype": "float32"},
+            {"name": "k_pages", "shape": ("P", "page_size", "D"),
+             "dtype": "float32", "repeat": "ppb"},
+        ],
+        "outputs": [
+            {"shape": ("B", "S", "G"), "dtype": "float32"},
+            {"shape": ("B", "S", "G", "D"), "dtype": "float32"},
+        ],
+        "partial_group": "clean-partials",
+        "samples": [
+            {"B": 2, "S": 2, "bps": 2, "ppb": 2, "NB": 4,
+             "G": 4, "D": 8, "P": 16, "page_size": 4, "NPm1": 15,
+             "_parity": True},
+            {"B": 1, "S": 1, "bps": 1, "ppb": 1, "NB": 1,
+             "G": 8, "D": 8, "P": 4, "page_size": 4, "NPm1": 3},
+        ],
+    },
+    "clean_whole_array": {
+        "grid": ("B", "S"),
+        "operands": [
+            {"name": "tables", "shape": ("B", "NB", "ppb"),
+             "dtype": "int32", "value_range": (0, "NPm1")},
+            {"name": "q", "shape": ("B", "G", "D"), "dtype": "float32"},
+        ],
+        "outputs": [
+            {"shape": ("B", "S", "G"), "dtype": "float32"},
+            {"shape": ("B", "S", "G", "D"), "dtype": "float32"},
+        ],
+        "partial_group": "clean-partials",
+        "samples": [
+            {"B": 2, "S": 2, "ppb": 2, "NB": 4, "G": 4, "D": 8,
+             "NPm1": 15, "_parity": True},
+        ],
+    },
+}
+
+REPLINT_PARTIAL_GROUPS = {"clean-partials": {}}
+
+
+def _kernel(*refs):
+    refs[-1][...] = refs[0][...]
+
+
+def clean_gather(tables, lens, q, k_pages, B, S, bps, ppb, G, D, page_size):
+    # TPU idiom: prefetch tables drive a partial-bound per-page gather
+    def kv_map(b, s, blk, tables, lens, *, j):
+        del lens
+        return (tables[b, s * bps + blk, j], 0, 0)
+
+    kv_spec = lambda j: pl.BlockSpec(  # noqa: E731
+        (1, page_size, D), functools.partial(kv_map, j=j))
+
+    def m_map(b, s, blk, tables, lens):
+        return (b, s, 0)
+
+    def acc_map(b, s, blk, tables, lens):
+        return (b, s, 0, 0)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pl.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, S, bps),
+            in_specs=(
+                [pl.BlockSpec((1, G, D), lambda b, s, blk, t, l: (b, 0, 0))]
+                + [kv_spec(j) for j in range(ppb)]),
+            out_specs=[pl.BlockSpec((1, 1, G), m_map),
+                       pl.BlockSpec((1, 1, G, D), acc_map)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, G, D), jnp.float32),
+        ],
+    )(tables, lens, q, *([k_pages] * ppb))
+
+
+def clean_whole_array(tables, q, B, S, G, D):
+    # GPU idiom: whole-array factory specs, gathers happen in-kernel
+    whole = lambda arr: pl.BlockSpec(  # noqa: E731
+        arr.shape, lambda b, s: (0,) * arr.ndim)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, S),
+        in_specs=[whole(tables), whole(q)],
+        out_specs=[
+            pl.BlockSpec((1, 1, G), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda b, s: (b, s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, G, D), jnp.float32),
+        ],
+    )(tables, q)

@@ -1,0 +1,92 @@
+"""Historical scheduler/allocator bugs re-seeded as model-checker
+fixtures.
+
+Each driver subclasses the live ``LifecycleDriver`` and overrides one
+``_do_*`` method with the *pre-fix* transition relation; the
+``statemachine`` rule loads this file by path and must rediscover both
+defects with a minimal counterexample trace (gated by
+``tests/test_statemachine.py``):
+
+* ``ExtendAfterPreemptDriver`` — PR 4's extend-after-preempt aliasing:
+  the decode loop iterates a snapshot of the running set without
+  re-checking membership, so ``mgr.extend`` runs on a victim preempted
+  earlier in the same pass, re-reserving pages under a PREEMPTED rid
+  (the stale row then survives ``tables.setdefault`` on re-admission —
+  silent KV aliasing).
+* ``ForkNoRollbackDriver`` — the fork refcount-rollback bug: on a dry
+  pool the child row is deleted but the shared-prefix refcount bumps
+  are kept, desyncing ``refcount`` from table occupancy.
+"""
+
+from repro.analysis.statemachine import (FORK_RID_BASE, LifecycleDriver,
+                                         ModelConfig)
+from repro.serving.request import Status
+
+
+class ExtendAfterPreemptDriver(LifecycleDriver):
+    """Decode with the pre-fix loop: no preemption-safety re-check."""
+
+    def _do_decode(self):
+        sched = self.sched
+        # BUG (pre-PR4): the RUNNING filter runs once, up front — a
+        # victim preempted by an earlier iteration of this very loop is
+        # still extended, and mgr.extend re-reserves pages under its
+        # now-PREEMPTED rid
+        order = [r for r in sorted(sched.running.values(),
+                                   key=lambda r: r.rid)
+                 if r.status is Status.RUNNING]
+        for req in order:
+            while not sched.mgr.extend(req.rid, 1):
+                cand = [r for r in sched.running.values()
+                        if r.status in (Status.RUNNING, Status.PREFILLING)
+                        and r is not req]
+                if not cand:
+                    break
+                sched._preempt(max(cand, key=lambda r: r.rid))
+        for req in list(sched.running.values()):
+            if (req.status is Status.RUNNING
+                    and len(req.output) < self.cfg.max_new):
+                req.output.append(7)
+
+
+class ForkNoRollbackDriver(LifecycleDriver):
+    """Fork with the pre-fix failure path: bumps kept, row deleted."""
+
+    def _do_fork(self, src_rid):
+        mgr = self.sched.mgr
+        dst = FORK_RID_BASE + self.fork_count
+        self.fork_count += 1
+        src_len = mgr.lens[src_rid]
+        full = src_len // mgr.page_size
+        row = mgr.tables[src_rid][:full]
+        for p in row:
+            mgr.refcount[p] += 1
+        mgr.tables[dst] = list(row)
+        mgr.lens[dst] = full * mgr.page_size
+        if src_len % mgr.page_size:
+            if not mgr.reserve(dst, src_len):
+                # BUG (pre-fix): the shared-prefix refcount bumps are
+                # not rolled back with the row
+                del mgr.tables[dst]
+                del mgr.lens[dst]
+                return
+        self.forked = self.forked | {dst}
+
+
+# two RUNNING rows on an exactly-full pool: the first extend must
+# preempt, and the buggy loop then extends the victim it just preempted
+_EXTEND_CFG = ModelConfig(
+    name="extend-after-preempt", num_pages=2, page_size=2, max_slots=2,
+    prompts=((1, 2), (3, 4)), cancel_budget=0, fail_budget=0)
+
+# a parent with a partial tail page on a dry pool: fork's tail
+# reservation must fail and roll the prefix bumps back
+_FORK_CFG = ModelConfig(
+    name="fork-no-rollback", num_pages=2, page_size=2, max_slots=1,
+    prompts=((1, 2, 3),), fork=True, cancel_budget=0, fail_budget=0)
+
+REPLINT_STATEMACHINE_CASES = [
+    ("extend-after-preempt",
+     lambda: ExtendAfterPreemptDriver(_EXTEND_CFG)),
+    ("fork-no-rollback", lambda: ForkNoRollbackDriver(_FORK_CFG)),
+]

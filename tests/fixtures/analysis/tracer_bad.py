@@ -43,3 +43,25 @@ def jitted_step(state, tok):
     while pos > 0:  # Python `while` on a traced value
         pos = pos - 1
     return state, tok
+
+
+@jax.jit
+def jitted_loop_carry(xs):
+    # the fori_loop carry is traced even though init is a constant —
+    # branching on the body parameter and on the loop result both escape
+    def body(i, carry):
+        if carry > 0:  # Python `if` on a traced loop carry
+            return carry + xs[i]
+        return carry
+    total = jax.lax.fori_loop(0, 4, body, 0.0)
+    if total > 1.0:  # Python `if` on a traced loop result
+        return total
+    return float(total)  # host escape on the traced result
+
+
+@jax.jit
+def jitted_scan_carry(xs):
+    def step(carry, x):
+        return carry + x, np.tanh(carry)  # np.* on a traced scan carry
+    out, ys = jax.lax.scan(step, 0.0, xs)
+    return out, ys

@@ -58,3 +58,20 @@ def plain_host_helper(xs):
     if xs[0] > 0:
         return float(xs[0])
     return 0.0
+
+
+@jax.jit
+def jitted_loop_clean(xs):
+    # structured control flow on the carry stays inside the trace
+    def body(i, carry):
+        return carry + jnp.where(carry > 0, xs[i], 0.0)
+    total = jax.lax.fori_loop(0, 4, body, 0.0)
+    return jnp.where(total > 1.0, total, 0.0)
+
+
+@jax.jit
+def jitted_scan_clean(xs):
+    def step(carry, x):
+        return carry + x, jnp.tanh(carry)
+    out, ys = jax.lax.scan(step, 0.0, xs)
+    return out, ys

@@ -25,7 +25,8 @@ import pytest
 from repro.analysis import (RULES, active, analyze_paths, apply_baseline,
                             load_baseline, render_json, render_text,
                             write_baseline)
-from repro.analysis.__main__ import main as replint_main
+from repro.analysis.core import render_sarif, stale_baseline_entries
+from repro.analysis.__main__ import _merge_base_files, main as replint_main
 from repro.errors import (DistributedSetupError, EngineConfigError,
                           EngineError, UnsupportedFeature)
 
@@ -45,10 +46,11 @@ def gating(findings):
 # ---------------------------------------------------------------------------
 # rule registry
 # ---------------------------------------------------------------------------
-def test_all_five_rules_registered():
+def test_all_rules_registered():
     assert set(RULES) >= {"pallas-contract", "knob-threading",
                           "error-discipline", "tracer-safety",
-                          "allocator-discipline"}
+                          "allocator-discipline", "shapes",
+                          "statemachine"}
     for rule in RULES.values():
         assert rule.doc  # --list-rules has something to print
 
@@ -131,10 +133,77 @@ def test_tracer_safety_fires_on_host_escapes():
     assert any("never applies it" in m for m in msgs)  # unused kv_scale
 
 
+def test_tracer_safety_taints_loop_carries():
+    # fori_loop/scan carries are traced even from a constant init: the
+    # body's parameters and the loop's result both carry taint
+    by_sym = {}
+    for f in run_on("tracer_bad.py"):
+        by_sym.setdefault(f.symbol, []).append(f.message)
+    assert any("`if` on a traced value" in m
+               for m in by_sym["jitted_loop_carry"])
+    assert any("`float()` on a traced value" in m
+               for m in by_sym["jitted_loop_carry"])
+    assert any("np.tanh() on a traced value" in m
+               for m in by_sym["jitted_scan_carry"])
+
+
 def test_tracer_safety_clean_on_static_control_flow():
     # kw-only kernel params, static_argnames, .shape math, np on static
-    # scalars, pl.when/jnp.where, and plain host helpers: all legal
+    # scalars, pl.when/jnp.where, loop carries consumed with jnp ops,
+    # and plain host helpers: all legal
     assert run_on("tracer_clean.py") == []
+
+
+# ---------------------------------------------------------------------------
+# shapes (ISSUE 9): abstract interpretation of pallas_call launches
+# ---------------------------------------------------------------------------
+def test_shapes_fires_on_all_five_defect_classes():
+    findings = run_on("kernels/shapes_bad.py", rules=["shapes"])
+    msgs = [f.message for f in findings]
+    # 1. BlockSpec rank mismatch vs the pool array
+    assert any("has rank" in m and "operand" in m for m in msgs)
+    # 2. non-divisible block shape
+    assert any("does not divide operand" in m for m in msgs)
+    # 3. index_map addressing out-of-range blocks at some grid point
+    assert any("beyond operand" in m for m in msgs)
+    # 4. wrong split-K partial dtype (with the group tag in the message)
+    assert any("split-K" in m and "must be" in m for m in msgs)
+    # 5. TPU/GPU partial-contract skew
+    assert any("parity broken" in m for m in msgs)
+    # and a launch with no declared contract is itself a finding
+    assert any("no declared kernel contract" in m for m in msgs)
+
+
+def test_shapes_clean_on_contract_respecting_idioms():
+    # prefetch-driven index maps, spec-factory lambdas, comprehension
+    # in_specs, whole-array specs: none may false-positive
+    assert run_on("kernels/shapes_clean.py", rules=["shapes"]) == []
+
+
+def test_shapes_verifies_every_live_kernel_launch(monkeypatch):
+    # the acceptance bar: every pallas_call site in src/repro/kernels
+    # (both backends) is visited against a declared contract, and the
+    # live tree is clean
+    from repro.analysis import shapes
+    visited = []
+    orig = shapes._check_site
+
+    def spy(ctx, call, site, contract):
+        visited.append(site)
+        return orig(ctx, call, site, contract)
+
+    monkeypatch.setattr(shapes, "_check_site", spy)
+    findings = analyze_paths(["src/repro/kernels"], ROOT, rules=["shapes"])
+    assert gating(findings) == []
+    assert set(visited) == {
+        "paged_attention_partials", "paged_prefill_partials",
+        "combine_partials_pallas", "paged_attention_partials_gpu",
+        "paged_prefill_partials_gpu", "flex_attention_kernel"}
+
+
+def test_shapes_scoped_to_kernels_dirs():
+    assert RULES["shapes"].applies("src/repro/kernels/x.py")
+    assert not RULES["shapes"].applies("src/repro/serving/x.py")
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +261,63 @@ def test_baseline_file_format_is_versioned(tmp_path):
         data["findings"][0])
 
 
+def test_write_baseline_roundtrip_with_live_suppressions(tmp_path, capsys,
+                                                         monkeypatch):
+    # --write-baseline over a tree containing in-source suppressions:
+    # suppressed findings are NOT grandfathered (deleting the comment
+    # must surface them again), and the written file round-trips to a
+    # green run
+    monkeypatch.chdir(ROOT)
+    bl = tmp_path / "bl.json"
+    paths = [str(FIXTURES / "alloc_bad.py"), str(FIXTURES / "suppressed.py")]
+    assert replint_main([*paths, "--baseline", str(bl),
+                         "--write-baseline"]) == 0
+    data = json.loads(bl.read_text())
+    assert len(data["findings"]) == 3  # alloc_bad only, none suppressed
+    assert all(f["path"].endswith("alloc_bad.py")
+               for f in data["findings"])
+    capsys.readouterr()
+    assert replint_main([*paths, "--baseline", str(bl)]) == 0
+
+
+def test_stale_baseline_entry_is_flagged_not_gating(tmp_path, capsys,
+                                                    monkeypatch):
+    monkeypatch.chdir(ROOT)
+    rel = "tests/fixtures/analysis/knobs_bad.py"
+    bl = tmp_path / "bl.json"
+    assert replint_main([rel, "--baseline", str(bl),
+                         "--write-baseline"]) == 0
+    data = json.loads(bl.read_text())
+    data["findings"].append({"rule": "knob-threading", "path": rel,
+                             "symbol": "long_gone",
+                             "message": "a finding that was fixed"})
+    bl.write_text(json.dumps(data))
+    capsys.readouterr()
+    # still exit 0 (stale detection warns, never gates) with the
+    # warning on stderr naming the dead entry
+    assert replint_main([rel, "--baseline", str(bl)]) == 0
+    err = capsys.readouterr().err
+    assert "stale baseline entry" in err
+    assert "long_gone" in err
+
+
+def test_stale_baseline_entries_scoped_to_analyzed_paths():
+    findings = run_on("knobs_bad.py")
+    live = {f.key() for f in findings}
+    path = findings[0].path
+    stale_here = ("knob-threading", path, "gone", "old msg")
+    stale_elsewhere = ("knob-threading", "src/repro/other.py", "x", "m")
+    baseline = live | {stale_here, stale_elsewhere}
+    # full run (analyzed_paths=None): every dead entry is in scope
+    assert stale_baseline_entries(findings, baseline) == \
+        sorted([stale_here, stale_elsewhere])
+    # --changed-only run: entries for unanalyzed files stay quiet
+    assert stale_baseline_entries(findings, baseline, [path]) == \
+        [stale_here]
+    # live entries are never stale
+    assert stale_baseline_entries(findings, live) == []
+
+
 # ---------------------------------------------------------------------------
 # reporters
 # ---------------------------------------------------------------------------
@@ -218,6 +344,43 @@ def test_text_report_counts_and_locations():
     assert "replint: 3 finding(s)" in text
 
 
+def test_text_report_matches_problem_matcher():
+    # the CI lint leg turns report lines into PR annotations through
+    # .github/replint-problem-matcher.json — the formats must agree
+    import re
+    matcher = json.loads(
+        (ROOT / ".github" / "replint-problem-matcher.json").read_text())
+    pattern = matcher["problemMatcher"][0]["pattern"][0]
+    rx = re.compile(pattern["regexp"])
+    findings = run_on("knobs_bad.py")
+    lines = [ln for ln in render_text(findings).splitlines()
+             if not ln.startswith("replint:")]
+    assert lines
+    for ln in lines:
+        m = rx.match(ln)
+        assert m, f"problem matcher missed: {ln!r}"
+        assert m.group(pattern["code"]) in RULES
+
+
+def test_sarif_report_schema():
+    findings = run_on("alloc_bad.py", "suppressed.py")
+    payload = json.loads(render_sarif(findings, sorted(RULES)))
+    assert payload["version"] == "2.1.0"
+    run = payload["runs"][0]
+    assert run["tool"]["driver"]["name"] == "replint"
+    rule_ids = [r["id"] for r in run["tool"]["driver"]["rules"]]
+    assert set(rule_ids) >= set(RULES)
+    results = run["results"]
+    assert len(results) == 6
+    # suppressed findings travel with a suppressions entry, mirroring
+    # the gating semantics instead of silently vanishing
+    assert sum("suppressions" in r for r in results) == 3
+    for r in results:
+        assert r["ruleId"] == rule_ids[r["ruleIndex"]]
+        region = r["locations"][0]["physicalLocation"]["region"]
+        assert region["startLine"] >= 1 and region["startColumn"] >= 1
+
+
 # ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
@@ -238,6 +401,46 @@ def test_driver_exit_codes_on_fixture(capsys, monkeypatch):
     assert replint_main([bad, "--baseline", ""]) == 1
     clean = str(FIXTURES / "knobs_clean.py")
     assert replint_main([clean, "--baseline", ""]) == 0
+
+
+def test_driver_sarif_flag(capsys, monkeypatch):
+    monkeypatch.chdir(ROOT)
+    assert replint_main(["--json", "--sarif"]) == 2
+    capsys.readouterr()
+    bad = str(FIXTURES / "knobs_bad.py")
+    assert replint_main([bad, "--sarif", "--baseline", ""]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["version"] == "2.1.0"
+    assert len(payload["runs"][0]["results"]) == 3
+
+
+def test_changed_only_resolves_merge_base(tmp_path):
+    import subprocess
+
+    def git(*argv):
+        subprocess.run(["git", "-c", "user.name=t", "-c",
+                        "user.email=t@t", *argv], cwd=tmp_path,
+                       check=True, capture_output=True)
+
+    git("init", "-q", "-b", "main")
+    (tmp_path / "a.py").write_text("A = 1\n")
+    git("add", "a.py")
+    git("commit", "-qm", "base")
+    # no origin/main yet: merge-base resolution silently contributes
+    # nothing (fresh clone / detached CI checkout)
+    assert _merge_base_files(tmp_path) == []
+    # mark the current tip as origin/main, then commit past it
+    git("update-ref", "refs/remotes/origin/main", "HEAD")
+    (tmp_path / "b.py").write_text("B = 2\n")
+    git("add", "b.py")
+    git("commit", "-qm", "feature")
+    assert _merge_base_files(tmp_path) == ["b.py"]
+    # the --changed-only set is the union: committed-since-merge-base
+    # plus the dirty worktree
+    from repro.analysis.__main__ import _changed_files
+    (tmp_path / "c.py").write_text("C = 3\n")
+    changed = {p.name for p in _changed_files(tmp_path)}
+    assert changed == {"b.py", "c.py"}
 
 
 def test_driver_rule_selection(capsys, monkeypatch):
